@@ -1,0 +1,96 @@
+"""Shared benchmark harness: run FRED experiments, persist results."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.bandwidth import BandwidthConfig
+from repro.core.rules import ServerConfig
+from repro.data.mnist import load_mnist
+from repro.models.mlp import init_mlp, nll_loss
+from repro.sim.fred import SimConfig, run_simulation
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def mnist_experiment(
+    *, rule: str, lam: int, mu: int, steps: int, lr: float,
+    c_push: float = 0.0, c_fetch: float = 0.0, variant: str = "intent",
+    seed: int = 0, eval_every: int = 0, drop_policy: str = "cache",
+    dispatcher: str = "uniform", per_tensor_fetch: bool = False,
+):
+    """One FRED run of the paper's 784-200-10 MLP task → results dict."""
+    eval_every = eval_every or max(steps // 20, 1)
+    params = init_mlp(jax.random.PRNGKey(seed))
+    ds = load_mnist(seed=seed)
+    cfg = SimConfig(
+        num_clients=lam,
+        batch_size=mu,
+        dispatcher=dispatcher,
+        server=ServerConfig(rule=rule, lr=lr, variant=variant),
+        bandwidth=BandwidthConfig(c_push=c_push, c_fetch=c_fetch,
+                                  drop_policy=drop_policy,
+                                  per_tensor_fetch=per_tensor_fetch),
+        seed=seed,
+    )
+    t0 = time.time()
+    out = run_simulation(
+        cfg, nll_loss, params, ds.x_train, ds.y_train, steps,
+        eval_every=eval_every,
+        eval_fn=lambda p: nll_loss(p, ds.x_valid, ds.y_valid),
+    )
+    return {
+        "rule": rule, "lam": lam, "mu": mu, "lr": lr, "steps": steps,
+        "variant": variant, "c_push": c_push, "c_fetch": c_fetch,
+        "seed": seed,
+        "curve_steps": out["steps"],
+        "val_cost": out["val_cost"],
+        "final_cost": out["val_cost"][-1] if out["val_cost"] else None,
+        "best_cost": min(out["val_cost"]) if out["val_cost"] else None,
+        "counters": out["counters"],
+        "wall_s": round(time.time() - t0, 2),
+    }
+
+
+LR_POOLS = {
+    # candidate pools per rule (paper §4.1: "separately choose the best
+    # learning rate ... from a pool of candidate learning rates")
+    "fasgd": (0.001, 0.0025, 0.005, 0.01),
+    "sasgd": (0.02, 0.04, 0.08, 0.16),
+    "asgd": (0.0025, 0.005, 0.01, 0.02),
+}
+
+
+def tune_lr(rule: str, lam: int, mu: int, steps: int, seed: int = 0):
+    """Short-run lr selection per the paper's protocol -> (best_lr, trace)."""
+    best, trace = None, {}
+    for lr in LR_POOLS[rule]:
+        r = mnist_experiment(rule=rule, lam=lam, mu=mu, steps=steps, lr=lr,
+                             seed=seed)
+        trace[lr] = r["final_cost"]
+        if best is None or r["final_cost"] < trace[best]:
+            best = lr
+    return best, trace
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load(name: str):
+    with open(os.path.join(RESULTS_DIR, name)) as f:
+        return json.load(f)
+
+
+def auc(curve) -> float:
+    """Area under the validation-cost curve — a scalar 'converges faster
+    AND lower' summary used for rule comparisons."""
+    return float(np.trapezoid(np.asarray(curve)))

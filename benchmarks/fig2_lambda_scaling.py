@@ -1,0 +1,64 @@
+"""Paper Figure 2: FASGD vs SASGD as λ grows (250/500/1000/10000, μ=128).
+
+Claim validated: FASGD wins at every λ and its relative outperformance
+*increases* with λ (staleness grows with client count).  λ and steps are
+scaled down by default for the CPU container; `--full` uses the paper grid.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import auc, mnist_experiment, save
+
+def run(lams, steps, mu=128, seed=0, lrs=None):
+    """Paper §4.1: fig2 reuses 'the same learning rates from the first
+    experiment' — pass fig1's selected lrs, else re-select."""
+    if lrs is None:
+        import json, os
+        from benchmarks.common import RESULTS_DIR
+        f1 = os.path.join(RESULTS_DIR, "fig1.json")
+        if os.path.exists(f1):
+            rows1 = json.load(open(f1))
+            lrs = {r["rule"]: r.get("selected_lr", r["lr"]) for r in rows1}
+        else:
+            from benchmarks.fig1_fasgd_vs_sasgd import select_lrs
+            lrs = select_lrs(steps, seed)
+    LR = lrs
+    rows = []
+    for lam in lams:
+        for rule in ("fasgd", "sasgd"):
+            r = mnist_experiment(rule=rule, lam=lam, mu=mu, steps=steps,
+                                 lr=LR[rule], seed=seed)
+            r["auc"] = auc(r["val_cost"])
+            rows.append(r)
+            print(f"  fig2 λ={lam:<6} {rule:5s} final={r['final_cost']:.4f} "
+                  f"auc={r['auc']:.2f} ({r['wall_s']}s)")
+    save("fig2.json", rows)
+    return rows
+
+
+def summarize(rows, lams):
+    gaps = {}
+    for lam in lams:
+        f = next(r for r in rows if r["rule"] == "fasgd" and r["lam"] == lam)
+        s = next(r for r in rows if r["rule"] == "sasgd" and r["lam"] == lam)
+        gaps[lam] = s["final_cost"] - f["final_cost"]
+    return gaps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper grid λ∈{250,500,1000,10000} (slow)")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+    lams = [250, 500, 1000, 10000] if args.full else [16, 64, 256]
+    steps = args.steps or (20000 if args.full else 4000)
+    rows = run(lams, steps)
+    gaps = summarize(rows, lams)
+    print("fig2 cost gap (SASGD − FASGD) by λ:",
+          {k: round(v, 4) for k, v in gaps.items()})
+
+
+if __name__ == "__main__":
+    main()

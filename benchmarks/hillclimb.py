@@ -1,0 +1,97 @@
+"""§Perf hillclimb runner: re-dry-run a pair with an optimization variant
+and diff the roofline terms against the recorded baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb \\
+      --arch deepseek-v2-236b --shape decode_32k \\
+      --tag opt-mla-seq --env REPRO_MLA_CACHE=seq
+
+Each run appends to dryrun.jsonl under its --tag; `--report` prints the
+baseline-vs-variant table for EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def rows_for(arch, shape, mesh="16x16"):
+    out = {}
+    with open(RESULTS) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if (r.get("arch") == arch and r.get("shape") == shape
+                    and r.get("mesh") == mesh and r.get("status") == "ok"):
+                out[r["tag"]] = r      # last write per tag wins
+    return out
+
+
+def report(arch, shape):
+    rows = rows_for(arch, shape)
+    if "baseline" not in rows:
+        print("no baseline recorded")
+        return
+    base = rows["baseline"]
+    print(f"== {arch} × {shape} ==")
+    hdr = f"{'tag':24s} {'compute_ms':>10s} {'memory_ms':>10s} {'coll_ms':>10s} {'mem GiB':>8s}"
+    print(hdr)
+    for tag, r in sorted(rows.items(), key=lambda kv: kv[0] != "baseline"):
+        mem = (r["mem"]["temp_bytes"] + r["mem"]["arg_bytes"]) / 2**30
+        line = (f"{tag:24s} {r['compute_s']*1e3:10.2f} {r['memory_s']*1e3:10.2f} "
+                f"{r['collective_s']*1e3:10.2f} {mem:8.2f}")
+        if tag != "baseline":
+            def d(k):
+                return (r[k] - base[k]) / max(base[k], 1e-12) * 100
+            line += (f"   Δcomp={d('compute_s'):+.0f}% Δmem={d('memory_s'):+.0f}% "
+                     f"Δcoll={d('collective_s'):+.0f}%")
+        print(line)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--env", nargs="*", default=[],
+                    help="VAR=VALUE pairs set for the dry-run subprocess")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON ModelConfig overrides (merged onto defaults)")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+
+    if args.report or not args.tag:
+        report(args.arch, args.shape)
+        return
+
+    env = dict(os.environ)
+    for kv in args.env:
+        k, v = kv.split("=", 1)
+        env[k] = v
+    # merge default pair overrides (remat / attn_window) with user's
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.launch.dryrun import pair_list
+    base_ov = None
+    for a, s, ov, skip in pair_list():
+        if a == args.arch and s == args.shape:
+            base_ov = dict(ov or {})
+    user_ov = json.loads(args.overrides) if args.overrides else {}
+    base_ov.update(user_ov)
+
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+           "--shape", args.shape, "--tag", args.tag,
+           "--overrides", json.dumps(base_ov), "--out", RESULTS]
+    r = subprocess.run(cmd, env=env)
+    if r.returncode == 0:
+        report(args.arch, args.shape)
+    sys.exit(r.returncode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Roofline table: render benchmarks/results/dryrun.jsonl as markdown.
+
+The numbers come from the dry-run (launch.dryrun); this tool aggregates:
+per (arch × shape × mesh) the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and per-device memory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def load(path=RESULTS, mesh=None, tag="baseline"):
+    rows = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("status") != "ok" or (tag and r.get("tag") != tag):
+                continue
+            if mesh and r.get("mesh") != mesh:
+                continue
+            rows[(r["arch"], r["shape"], r["mesh"])] = r   # last write wins
+    return sorted(rows.values(), key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def fmt_table(rows):
+    hdr = ("| arch | shape | mesh | compute ms | memory ms | coll ms | "
+           "bottleneck | useful-FLOP frac | mem/dev GiB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        uf = r.get("useful_flops_frac")
+        mem = (r.get("mem", {}).get("temp_bytes", 0)
+               + r.get("mem", {}).get("arg_bytes", 0)) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s'] * 1e3:9.2f} | {r['memory_s'] * 1e3:9.2f} "
+            f"| {r['collective_s'] * 1e3:7.2f} | {r['bottleneck']:10s} "
+            f"| {uf:.3f} | {mem:6.2f} |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s'] * 1e3:9.2f} | {r['memory_s'] * 1e3:9.2f} "
+            f"| {r['collective_s'] * 1e3:7.2f} | {r['bottleneck']:10s} "
+            f"| n/a | {mem:6.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    rows = load(mesh=args.mesh, tag=args.tag)
+    if not rows:
+        print("  roofline: no dry-run results yet "
+              "(run python -m repro.launch.dryrun --all)")
+        return
+    print(fmt_table(rows))
+    worst = max((r for r in rows if r.get("useful_flops_frac")),
+                key=lambda r: max(r["memory_s"], r["collective_s"])
+                / max(r["compute_s"], 1e-12), default=None)
+    if worst:
+        print(f"\nworst roofline fraction: {worst['arch']} × {worst['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""All-rules comparison: ASGD / SASGD / exp-penalty (Chan & Lane 2014) /
+FASGD / sync SGD on the same deterministic schedule.
+
+The paper positions FASGD against SASGD (Zhang et al.) and mentions the
+exponential staleness penalty (Chan & Lane) as insufficient at scale
+("it will reduce the learning rate too far when staleness values are
+large") — this benchmark puts all of them on one table, plus the
+synchronous upper bound.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import LR_POOLS, auc, mnist_experiment, save
+
+RULES = ("asgd", "sasgd", "exp", "fasgd", "ssgd")
+POOLS = dict(LR_POOLS)
+POOLS["exp"] = POOLS["asgd"]
+POOLS["ssgd"] = (0.05, 0.1, 0.2, 0.4)
+
+
+def run(steps=3000, lam=16, mu=8, seed=0):
+    rows = []
+    for rule in RULES:
+        disp = "roundrobin" if rule == "ssgd" else "uniform"
+        best = None
+        for lr in POOLS[rule]:
+            r = mnist_experiment(rule=rule, lam=lam, mu=mu,
+                                 steps=max(steps // 4, 250), lr=lr, seed=seed,
+                                 dispatcher=disp)
+            if best is None or r["final_cost"] < best[1]:
+                best = (lr, r["final_cost"])
+        r = mnist_experiment(rule=rule, lam=lam, mu=mu, steps=steps,
+                             lr=best[0], seed=seed, dispatcher=disp)
+        r["auc"] = auc(r["val_cost"])
+        rows.append(r)
+        print(f"  rules λ={lam} {rule:5s} lr={best[0]:<6} "
+              f"final={r['final_cost']:.4f} best={r['best_cost']:.4f} "
+              f"auc={r['auc']:.2f} ({r['wall_s']}s)")
+    save("rules_comparison.json", rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=3000)
+    ap.add_argument("--lam", type=int, default=16)
+    args = ap.parse_args()
+    rows = run(args.steps, lam=args.lam)
+    by = {r["rule"]: r for r in rows}
+    assert by["fasgd"]["auc"] < by["asgd"]["auc"], "FASGD must beat plain ASGD"
+    print(f"  rules: FASGD auc={by['fasgd']['auc']:.2f} vs "
+          f"SASGD {by['sasgd']['auc']:.2f}, exp {by['exp']['auc']:.2f}, "
+          f"ASGD {by['asgd']['auc']:.2f}, sync {by['ssgd']['auc']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark entry point: one experiment per paper table/figure + extras.
+
+  PYTHONPATH=src python -m benchmarks.run            # fast CI-sized pass
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale grids
+
+Order:
+  fig1 — FASGD vs SASGD, (μ,λ) grid (paper Fig. 1)
+  fig2 — λ scaling (paper Fig. 2)
+  fig3 — B-FASGD bandwidth sweep (paper Fig. 3)
+  kernels — fused-update microbench + allclose gate
+  roofline — dry-run roofline table (if dryrun.jsonl exists)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    fast_steps = args.steps or (20000 if args.full else 1500)
+
+    print("== fig1: FASGD vs SASGD over (mu, lambda), mu*lambda=128 ==")
+    from benchmarks import fig1_fasgd_vs_sasgd as fig1
+    rows1 = fig1.run(steps=fast_steps)
+    auc_wins, final_wins, total = fig1.summarize(rows1)
+    print(f"fig1: FASGD beats SASGD on convergence speed (AUC) in "
+          f"{auc_wins}/{total} combos, on final cost in {final_wins}/{total}")
+
+    print("== fig2: lambda scaling ==")
+    from benchmarks import fig2_lambda_scaling as fig2
+    lams = [250, 500, 1000, 10000] if args.full else [16, 64, 256]
+    rows2 = fig2.run(lams, steps=fast_steps)
+    gaps = fig2.summarize(rows2, lams)
+    print("fig2 gaps (SASGD-FASGD):", {k: round(v, 4) for k, v in gaps.items()})
+
+    print("== fig3: B-FASGD bandwidth ==")
+    from benchmarks import fig3_bandwidth as fig3
+    rows3 = fig3.run(steps=fast_steps)
+    print("fig3 summary:", fig3.summarize(rows3))
+
+    print("== rules comparison (ASGD/SASGD/exp/FASGD/sync) ==")
+    from benchmarks import rules_comparison
+    rows_r = rules_comparison.run(steps=fast_steps)
+    by = {r["rule"]: round(r["auc"], 2) for r in rows_r}
+    print("rules AUC:", by)
+
+    print("== kernels ==")
+    from benchmarks import kernels
+    k = kernels.run(rows=1 << 12)
+    print(f"kernels: allclose={k['allclose_vs_ref']} "
+          f"hbm-bound speedup={k['hbm_model']['bound_speedup']:.2f}x")
+
+    print("== roofline (from dry-run) ==")
+    from benchmarks import roofline
+    rows = roofline.load()
+    if rows:
+        print(roofline.fmt_table(rows))
+    else:
+        print("  (no dryrun.jsonl yet — run python -m repro.launch.dryrun --all)")
+
+    print(f"== all benchmarks done in {time.time() - t0:.0f}s ==")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

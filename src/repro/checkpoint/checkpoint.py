@@ -1,0 +1,98 @@
+"""Pytree checkpointing: npz payload + json manifest, multi-host aware.
+
+The manifest records the treedef (as flattened key paths), shapes, and
+dtypes, so restore validates structure before touching the payload.  Arrays
+are gathered to host (device_get) before saving — on a real pod this is the
+"gather to host-0" step; on CPU it's a no-op copy.
+
+Layout:   <dir>/step_<N>/manifest.json + arrays.npz
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None):
+    """Atomically save `tree` under <ckpt_dir>/step_<step>/."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {
+        "step": step,
+        "leaves": [
+            {"path": p, "shape": list(a.shape), "dtype": str(a.dtype)}
+            for p, a in zip(paths, host_leaves)
+        ],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for name in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", name))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None):
+    """Restore into the structure of `template`; validates paths/shapes/dtypes.
+
+    Returns (tree, step, extra).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    t_paths, t_leaves, treedef = _flatten_with_paths(template)
+    entries = manifest["leaves"]
+    saved_paths = [e["path"] for e in entries]
+    if saved_paths != t_paths:
+        missing = set(t_paths) - set(saved_paths)
+        extra_p = set(saved_paths) - set(t_paths)
+        raise ValueError(
+            f"checkpoint structure mismatch: missing={sorted(missing)[:5]} "
+            f"extra={sorted(extra_p)[:5]}")
+
+    z = np.load(os.path.join(d, "arrays.npz"))
+    leaves = []
+    for i, (e, t) in enumerate(zip(entries, t_leaves)):
+        a = z[f"leaf_{i}"]
+        if list(a.shape) != list(t.shape):
+            raise ValueError(f"{e['path']}: shape {a.shape} != template {t.shape}")
+        leaves.append(a.astype(t.dtype) if hasattr(t, "dtype") else a)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, step, manifest["extra"]

@@ -1,0 +1,38 @@
+"""Architecture registry: `get_config(name)` / `get_smoke_config(name)`.
+
+One module per assigned architecture; each exports FULL (the exact assigned
+config, bfloat16, exercised only via the dry-run) and SMOKE (a reduced
+same-family variant: ≤2 layers, d_model ≤ 512, ≤4 experts — run on CPU).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES, TrainerConfig
+
+ARCH_NAMES = [
+    "phi-3-vision-4.2b",
+    "grok-1-314b",
+    "mamba2-1.3b",
+    "zamba2-7b",
+    "hubert-xlarge",
+    "tinyllama-1.1b",
+    "llama3-8b",
+    "yi-34b",
+    "deepseek-v2-236b",
+    "yi-9b",
+]
+
+_MODULES = {n: "repro.configs." + n.replace("-", "_").replace(".", "_") for n in ARCH_NAMES}
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    import dataclasses
+    cfg = importlib.import_module(_MODULES[name]).FULL
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke_config(name: str, **overrides) -> ModelConfig:
+    import dataclasses
+    cfg = importlib.import_module(_MODULES[name]).SMOKE
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg

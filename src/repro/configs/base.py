@@ -1,0 +1,134 @@
+"""Config dataclasses for models, meshes, and the FASGD trainer."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str               # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 → d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0            # per-expert hidden dim (d_ff used for dense archs)
+
+    # --- MLA (deepseek-v2) ---
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 64
+    conv_width: int = 4
+
+    # --- hybrid (zamba2): shared attn block every k ssm layers ---
+    hybrid_attn_every: int = 0
+
+    # --- attention flavor ---
+    attn_window: int = 0         # 0 = full attention; >0 = sliding window
+    causal: bool = True
+    is_encoder: bool = False     # hubert: bidirectional, no decode step
+
+    # --- modality stubs ---
+    num_image_tokens: int = 0    # vlm: patch embeddings prepended to text
+    image_embed_dim: int = 0
+    frame_embed_dim: int = 0     # audio: precomputed frame embeddings
+
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    remat: bool = False          # checkpoint each layer in the train path
+    loss_chunk: int = 0          # >0: compute CE in seq chunks (bounds the
+                                 # f32 [B,S,V] logits footprint — §Perf)
+    unroll_stack: bool = False   # unroll the layer scan (cost-analysis mode:
+                                 # XLA counts while bodies once, so roofline
+                                 # terms are measured on small unrolled
+                                 # variants and extrapolated linearly in L)
+    param_dtype: str = "float32"     # dry-run configs use bfloat16
+    citation: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 128: MXU-lane aligned and
+        divisible by the model mesh axis (16), so embedding/unembedding and
+        all [_, V] logits tensors shard.  Unpadded vocabs (e.g. mamba2's
+        50280, hubert's 504) otherwise force REPLICATED 10GiB+ logit buffers
+        — found via the dry-run memory analysis.  Padded logit columns are
+        masked to −∞ in the loss and in decode sampling."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def supports_decode(self) -> bool:
+        return not self.is_encoder
+
+    def supports_long_context(self) -> bool:
+        """True if the arch can serve 500k-token decode sub-quadratically /
+        with bounded state: SSM & hybrid natively, attention archs via
+        sliding window."""
+        return self.arch_type in ("ssm", "hybrid") or self.attn_window > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    """Round-based FASGD trainer (DESIGN.md §2)."""
+    num_round_clients: int = 4   # C divergent parameter copies
+    rule: str = "fasgd"
+    lr: float = 0.005
+    gamma: float = 0.9
+    beta: float = 0.9
+    eps: float = 1e-8
+    variant: str = "intent"
+    c_push: float = 0.0
+    c_fetch: float = 0.0
+    drop_policy: str = "local_apply"   # 'local_apply' | 'discard'
+    stats_dtype: str = "float32"       # bfloat16 for the >100B dry-runs
+    seed: int = 0

@@ -1,0 +1,24 @@
+"""FASGD core: the paper's contribution as composable JAX modules.
+
+- `rules`     — ASGD / SASGD / FASGD / exp-penalty / sync server update rules
+- `staleness` — step-staleness and the exact B-Staleness oracle
+- `bandwidth` — B-FASGD probabilistic push/fetch gating
+- `round_trainer` — SPMD round-based FASGD for pod-scale training
+"""
+from repro.core.rules import (
+    ServerConfig,
+    ServerState,
+    init,
+    apply_update,
+    vbar,
+    update_stats,
+    effective_scale,
+)
+from repro.core.bandwidth import BandwidthConfig, transmit_prob, should_transmit
+from repro.core.staleness import step_staleness, b_staleness
+from repro.core.round_trainer import (
+    RoundState,
+    init_round_state,
+    build_round_step,
+    bandwidth_saved_bytes,
+)

@@ -1,0 +1,77 @@
+"""B-FASGD bandwidth gating (paper §2.3).
+
+A client transmits (push or fetch) at an opportunity iff
+
+    r < 1 / (1 + c / (v̄ + ε)),   r ~ U[0,1]                     (eq. 9)
+
+where v̄ is the mean over all parameters of the moving average of gradient
+std.  Separate hyper-parameters `c_push` and `c_fetch`.  `c = 0` means always
+transmit (probability exactly 1), which is the plain-FASGD baseline.
+
+Direction check (paper §2.3 last paragraph): large v̄ (high expected
+B-staleness) ⇒ probability → 1 ⇒ transmit more; small v̄ ⇒ skip more.  This
+matches `variant="intent"` statistics (v = MA of std).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthConfig:
+    c_push: float = 0.0
+    c_fetch: float = 0.0
+    eps: float = 1e-8
+    # What to do on the server when a client's push is dropped:
+    #  'cache'   — re-apply the most recent gradient from that client (the
+    #              paper's choice; needs a [λ, P] gradient cache).
+    #  'skip'    — no server update happens for this opportunity.
+    drop_policy: str = "cache"
+    # Per-tensor fetch gating (the paper's §5 future-work proposal):
+    # each parameter TENSOR is refreshed independently with probability
+    # 1/(1 + c_fetch/(v_leaf + eps)), v_leaf = that tensor's mean
+    # gradient-std MA — tensors whose statistics indicate higher staleness
+    # risk sync more often; bandwidth is spent where it matters.
+    per_tensor_fetch: bool = False
+
+    def __post_init__(self):
+        assert self.drop_policy in ("cache", "skip")
+
+    @property
+    def enabled(self) -> bool:
+        return self.c_push > 0 or self.c_fetch > 0 or self.per_tensor_fetch
+
+
+def transmit_prob(vbar, c, eps: float = 1e-8):
+    """Eq. 9 RHS — in (0, 1], monotone increasing in v̄, decreasing in c."""
+    c = jnp.asarray(c, jnp.float32)
+    return 1.0 / (1.0 + c / (vbar + eps))
+
+
+def should_transmit(key, vbar, c, eps: float = 1e-8):
+    """Bernoulli draw of eq. 9.  c == 0 short-circuits to True (prob 1)."""
+    r = jax.random.uniform(key)
+    return r < transmit_prob(vbar, c, eps)
+
+
+def per_tensor_fetch_mask(key, v_tree, c, eps: float = 1e-8):
+    """§5 extension: one independent eq.-9 draw per parameter tensor.
+
+    Returns (mask_tree of scalar bools, transmitted_bytes, total_bytes)."""
+    leaves = jax.tree.leaves(v_tree)
+    treedef = jax.tree.structure(v_tree)
+    keys = jax.random.split(key, len(leaves))
+    masks = []
+    sent = jnp.zeros((), jnp.float32)
+    total = 0.0
+    for k, l in zip(keys, leaves):
+        vb = jnp.mean(l.astype(jnp.float32))
+        m = jax.random.uniform(k) < transmit_prob(vb, c, eps)
+        masks.append(m)
+        nbytes = float(l.size * l.dtype.itemsize)
+        sent = sent + m.astype(jnp.float32) * nbytes
+        total += nbytes
+    return jax.tree.unflatten(treedef, masks), sent, total

@@ -1,0 +1,220 @@
+"""Round-based FASGD: the paper's async protocol mapped onto SPMD hardware.
+
+A lock-based parameter server is an anti-pattern on a TPU pod; what survives
+the port (DESIGN.md §2) is the *decision structure* of FASGD/B-FASGD:
+
+ - C client groups hold **divergent** parameter copies (a leading [C] array
+   axis over otherwise FSDP-sharded leaves).  Divergence is real: a client
+   that skips fetches keeps training on old parameters, and its step
+   staleness τ_c = T − ts_c grows.
+ - Each round every client computes a gradient on *its own* copy.
+ - The B-FASGD gate (eq. 9) decides per client whether that gradient is
+   **pushed** into the canonical server update and whether the client
+   **fetches** the new canonical parameters.  A skipped push/fetch is an
+   *elided collective* (reduce / broadcast over the client axis) — this is
+   exactly the paper's bandwidth saving expressed in ICI bytes.
+ - Pushed gradients update the server under any `core.rules` rule (FASGD's
+   per-parameter α/(v·τ) modulation by default).
+
+Two application modes:
+
+ - ``apply_mode='serial'`` (paper-faithful): pushed gradients are applied
+   one-at-a-time in client order via `lax.scan`, bit-identical to the lock
+   protocol with that arrival order; T advances by 1 per push.
+ - ``apply_mode='fused'`` (beyond-paper): one masked-sum update
+   θ ← θ − Σ_c m_c·(α/(v·τ_c))·g_c with a single stats update on the mean
+   pushed gradient; one reduction instead of C sequential passes — the
+   collective-friendly schedule.  §Perf quantifies the difference.
+
+Dropped pushes follow ``drop_policy``:
+ - ``'local_apply'`` (default): the client applies its own gradient to its
+   own copy (local-SGD semantics — the paper's "averaging unsent gradients
+   on the clients" speculation).
+ - ``'discard'``: the gradient is simply dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainerConfig
+from repro.core import rules as server_rules
+from repro.core.bandwidth import transmit_prob
+from repro.core.rules import ServerConfig, ServerState
+
+
+class RoundState(NamedTuple):
+    server: ServerState
+    client_params: Any          # pytree, leaves [C, ...]
+    client_ts: jnp.ndarray      # [C] int32
+    round_idx: jnp.ndarray      # int32
+
+
+def server_config(tc: TrainerConfig) -> ServerConfig:
+    return ServerConfig(
+        rule=tc.rule, lr=tc.lr, gamma=tc.gamma, beta=tc.beta, eps=tc.eps,
+        variant=tc.variant, num_clients=tc.num_round_clients,
+    )
+
+
+def _stack(tree, n):
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), tree)
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def init_round_state(tc: TrainerConfig, params) -> RoundState:
+    scfg = server_config(tc)
+    return RoundState(
+        server=server_rules.init(scfg, params),
+        client_params=_stack(params, tc.num_round_clients),
+        client_ts=jnp.zeros((tc.num_round_clients,), jnp.int32),
+        round_idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def _serial_apply(scfg: ServerConfig, server: ServerState, grads, push, client_ts):
+    """Apply pushed gradients one at a time (paper's lock order = client order)."""
+
+    def body(sv, inp):
+        g_c, push_c, ts_c = inp
+        cand, aux = server_rules.apply_update(scfg, sv, g_c, ts_c)
+        new = jax.tree.map(
+            lambda a, b: jnp.where(push_c, a, b), cand, sv
+        )
+        return new, aux["tau"]
+
+    server, taus = jax.lax.scan(body, server, (grads, push, client_ts))
+    return server, taus
+
+
+def _fused_apply(scfg: ServerConfig, server: ServerState, grads, push, client_ts):
+    """One masked-sum application of all pushed gradients (beyond-paper).
+
+    Stats (n, b, v) advance once with the mean pushed gradient; the weight
+    delta is Σ_c m_c·scale(v, τ_c)·g_c computed against the *post-stats* v,
+    and T advances by the number of pushes.
+    """
+    n_push = jnp.sum(push.astype(jnp.int32))
+    pushf = push.astype(jnp.float32)
+    mean_g = jax.tree.map(
+        lambda g: jnp.einsum("c,c...->...", pushf, g) / jnp.maximum(n_push, 1),
+        grads,
+    )
+    has_push = n_push > 0
+    stats_state = server_rules.update_stats(scfg, server, mean_g)
+    server = jax.tree.map(
+        lambda a, b: jnp.where(has_push, a, b), stats_state, server
+    )
+
+    taus = server_rules.step_staleness(server.timestamp, client_ts)  # [C]
+
+    def leaf_delta(v_leaf, g_leaf):
+        # scale_c = lr / (v*tau_c + eps) for fasgd; rules handled via scale fn
+        if scfg.rule == "fasgd":
+            scale = scfg.lr / (v_leaf[None] * taus.reshape((-1,) + (1,) * v_leaf.ndim) + scfg.eps)
+        elif scfg.rule == "sasgd":
+            scale = (scfg.lr / taus).reshape((-1,) + (1,) * v_leaf.ndim)
+        elif scfg.rule == "asgd":
+            scale = jnp.full((taus.shape[0],) + (1,) * v_leaf.ndim, scfg.lr)
+        else:
+            raise ValueError(f"fused mode supports asgd/sasgd/fasgd, not {scfg.rule}")
+        m = pushf.reshape((-1,) + (1,) * v_leaf.ndim)
+        return jnp.sum(m * scale * g_leaf, axis=0)
+
+    delta = jax.tree.map(leaf_delta, server.v, grads)
+    new_params = jax.tree.map(jnp.subtract, server.params, delta)
+    server = server._replace(
+        params=new_params, timestamp=server.timestamp + n_push
+    )
+    return server, taus
+
+
+def build_round_step(
+    tc: TrainerConfig,
+    grad_fn: Callable,     # grad_fn(params, batch) -> (loss, grads)
+    apply_mode: str = "serial",
+):
+    """Returns round_step(state, batch, key) -> (state, metrics).
+
+    `batch` leaves must have a leading [C] axis (one shard per client group).
+    """
+    assert apply_mode in ("serial", "fused"), apply_mode
+    scfg = server_config(tc)
+
+    def round_step(state: RoundState, batch, key):
+        k_push, k_fetch = jax.random.split(key)
+        C = tc.num_round_clients
+
+        losses, grads = jax.vmap(grad_fn)(state.client_params, batch)
+
+        vb = server_rules.vbar(state.server)
+        push = (
+            jax.random.uniform(k_push, (C,)) < transmit_prob(vb, tc.c_push, tc.eps)
+            if tc.c_push > 0 else jnp.ones((C,), bool)
+        )
+
+        if apply_mode == "serial":
+            server, taus = _serial_apply(scfg, state.server, grads, push, state.client_ts)
+        else:
+            server, taus = _fused_apply(scfg, state.server, grads, push, state.client_ts)
+
+        fetch = (
+            jax.random.uniform(k_fetch, (C,)) < transmit_prob(
+                server_rules.vbar(server), tc.c_fetch, tc.eps)
+            if tc.c_fetch > 0 else jnp.ones((C,), bool)
+        )
+
+        # --- client-side parameter refresh ---
+        def upd_leaf(cp, sp, g):
+            exp = (-1,) + (1,) * (cp.ndim - 1)
+            f = fetch.reshape(exp)
+            p = push.reshape(exp)
+            local = cp - tc.lr * g if tc.drop_policy == "local_apply" else cp
+            kept = jnp.where(p, cp, local)       # un-pushed grad applied locally
+            return jnp.where(f, sp[None], kept)  # fetched clients get canonical
+
+        client_params = jax.tree.map(upd_leaf, state.client_params, server.params, grads)
+        client_ts = jnp.where(fetch, server.timestamp, state.client_ts)
+
+        new_state = RoundState(
+            server=server,
+            client_params=client_params,
+            client_ts=client_ts,
+            round_idx=state.round_idx + 1,
+        )
+        metrics = {
+            "loss": jnp.mean(losses),
+            "loss_per_client": losses,
+            "mean_tau": jnp.mean(taus),
+            "pushes": jnp.sum(push.astype(jnp.int32)),
+            "fetches": jnp.sum(fetch.astype(jnp.int32)),
+            "timestamp": server.timestamp,
+        }
+        return new_state, metrics
+
+    return round_step
+
+
+def bandwidth_saved_bytes(tc: TrainerConfig, params, num_rounds: int,
+                          push_rate: float, fetch_rate: float) -> dict:
+    """ICI-byte accounting for the elided collectives (EXPERIMENTS.md §Perf).
+
+    A push is a reduce of one gradient copy; a fetch is a broadcast of one
+    parameter copy.  Rates are measured actual/potential ratios.
+    """
+    pbytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    C = tc.num_round_clients
+    full = num_rounds * C * pbytes
+    return {
+        "full_push_bytes": full,
+        "full_fetch_bytes": full,
+        "actual_push_bytes": int(full * push_rate),
+        "actual_fetch_bytes": int(full * fetch_rate),
+        "total_saving_factor": 2.0 / max(push_rate + fetch_rate, 1e-9),
+    }

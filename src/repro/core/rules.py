@@ -1,0 +1,224 @@
+"""Server update rules: ASGD, SASGD, FASGD (paper §2), exponential penalty,
+and synchronous SGD.
+
+All rules are pure functions over a `ServerState` pytree so they can live
+inside `jax.lax.scan` / `jax.jit` / `shard_map`.  The FASGD moving-average
+statistics (eqs. 4–6) are maintained for *every* rule when
+`config.track_stats` is on (B-FASGD gating needs them even under SASGD
+baselines); rules other than FASGD simply don't use them in the update.
+
+Faithfulness note (see DESIGN.md §1.1): eq. (6) as printed maintains a moving
+average of the *inverse* std and then divides by it, which contradicts the
+prose ("dividing the learning rate by the standard deviation") and the
+B-FASGD gate direction.  `variant="intent"` (default) averages the std itself;
+`variant="literal"` implements the printed equation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.staleness import step_staleness
+
+Rule = str  # 'asgd' | 'sasgd' | 'fasgd' | 'exp' | 'ssgd'
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    rule: Rule = "fasgd"
+    lr: float = 0.005
+    gamma: float = 0.9          # MA decay for n (2nd moment) and b (1st moment)
+    beta: float = 0.9           # MA decay for v (std average)
+    eps: float = 1e-8
+    variant: str = "intent"     # 'intent' | 'literal'  (DESIGN.md §1.1)
+    kappa: float = 0.15         # exp-penalty strength: lr * exp(-kappa * tau)
+    track_stats: bool = True    # maintain n/b/v even for non-FASGD rules
+    num_clients: int = 1        # ssgd needs to know when a round is complete
+    use_fused_kernel: bool = False  # route the FASGD update through Pallas
+
+    def __post_init__(self):
+        assert self.rule in ("asgd", "sasgd", "fasgd", "exp", "ssgd"), self.rule
+        assert self.variant in ("intent", "literal"), self.variant
+
+
+class ServerState(NamedTuple):
+    """Canonical parameters + timestamp + FASGD statistics.
+
+    `n`, `b`, `v` mirror the params pytree (zeros/ones-init); `pending` and
+    `pending_count` exist only for the synchronous rule (zeros otherwise —
+    scan requires fixed structure, and the sim keeps all fields live).
+    """
+    params: Any
+    timestamp: jnp.ndarray          # int32 scalar, "T" in the paper
+    n: Any                          # MA of g^2        (eq. 4)
+    b: Any                          # MA of g          (eq. 5)
+    v: Any                          # MA of std        (eq. 6; see variant)
+    pending: Optional[Any] = None   # ssgd: sum of gradients this round
+    pending_count: Optional[jnp.ndarray] = None
+
+
+def init(config: ServerConfig, params) -> ServerState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    # v starts at 1 so that the first few FASGD updates are ~plain ASGD
+    # instead of dividing by ~0.
+    ones = jax.tree.map(jnp.ones_like, params)
+    st = ServerState(
+        params=params,
+        timestamp=jnp.zeros((), jnp.int32),
+        n=zeros,
+        b=zeros,
+        v=ones,
+    )
+    if config.rule == "ssgd":
+        st = st._replace(
+            pending=jax.tree.map(jnp.zeros_like, params),
+            pending_count=jnp.zeros((), jnp.int32),
+        )
+    return st
+
+
+def _std(config: ServerConfig, n_leaf, b_leaf):
+    return jnp.sqrt(jnp.maximum(n_leaf - b_leaf**2, 0.0) + config.eps)
+
+
+def update_stats(config: ServerConfig, state: ServerState, grad) -> ServerState:
+    """Eqs. 4–6: one moving-average step with gradient `grad`."""
+    g, be = config.gamma, config.beta
+    n = jax.tree.map(lambda m, x: g * m + (1 - g) * x * x, state.n, grad)
+    b = jax.tree.map(lambda m, x: g * m + (1 - g) * x, state.b, grad)
+    if config.variant == "intent":
+        v = jax.tree.map(
+            lambda m, nn, bb: be * m + (1 - be) * _std(config, nn, bb), state.v, n, b
+        )
+    else:  # literal: MA of inverse std, exactly eq. (6) as printed
+        v = jax.tree.map(
+            lambda m, nn, bb: be * m + (1 - be) / _std(config, nn, bb), state.v, n, b
+        )
+    return state._replace(n=n, b=b, v=v)
+
+
+def _tau_tree(state: ServerState, tau):
+    """Broadcast a scalar staleness to a per-leaf pytree.  `tau` may already
+    be a pytree (per-tensor staleness — the paper's §5 extension, where each
+    tensor of a client copy may have synchronized at a different T)."""
+    if jax.tree.structure(tau) == jax.tree.structure(state.v):
+        return tau
+    return jax.tree.map(lambda _: tau, state.v)
+
+
+def effective_scale(config: ServerConfig, state: ServerState, tau):
+    """Per-parameter learning-rate pytree for one gradient with staleness
+    tau (scalar or per-leaf pytree)."""
+    taus = _tau_tree(state, tau)
+    if config.rule == "asgd":
+        return jax.tree.map(lambda v: jnp.full_like(v, config.lr), state.v)
+    if config.rule == "sasgd":
+        return jax.tree.map(
+            lambda v, t: jnp.full_like(v, config.lr) / t, state.v, taus)
+    if config.rule == "exp":
+        return jax.tree.map(
+            lambda v, t: jnp.full_like(v, config.lr)
+            * jnp.exp(-config.kappa * (t - 1.0)), state.v, taus)
+    if config.rule == "fasgd":
+        # eq. (7): alpha / (v * tau), elementwise in v.
+        return jax.tree.map(
+            lambda v, t: config.lr / (v * t + config.eps), state.v, taus
+        )
+    raise ValueError(config.rule)
+
+
+def apply_update(config: ServerConfig, state: ServerState, grad, grad_timestamp):
+    """One server update (paper's Async SGD protocol step 2 + FASGD eqs. 4-8).
+
+    Returns (new_state, aux) where aux carries the staleness and the mean
+    effective lr for diagnostics.  For `rule='ssgd'` the gradient is
+    accumulated and parameters only move once `num_clients` gradients arrived.
+    """
+    if jax.tree.structure(grad_timestamp) == jax.tree.structure(state.params):
+        # per-tensor timestamps (§5 extension)
+        tau = jax.tree.map(
+            lambda ts: step_staleness(state.timestamp, ts), grad_timestamp)
+        tau_scalar = sum(jnp.mean(t) for t in jax.tree.leaves(tau)) / max(
+            len(jax.tree.leaves(tau)), 1)
+    else:
+        tau = tau_scalar = step_staleness(state.timestamp, grad_timestamp)
+
+    if config.rule == "ssgd":
+        pending = jax.tree.map(jnp.add, state.pending, grad)
+        count = state.pending_count + 1
+        full = count >= config.num_clients
+
+        def do_apply(_):
+            new_params = jax.tree.map(
+                lambda p, s: p - config.lr * s / config.num_clients,
+                state.params,
+                pending,
+            )
+            return new_params, jax.tree.map(jnp.zeros_like, pending), jnp.zeros((), jnp.int32), state.timestamp + 1
+
+        def no_apply(_):
+            return state.params, pending, count, state.timestamp
+
+        params, pending, count, ts = jax.lax.cond(full, do_apply, no_apply, None)
+        new_state = state._replace(
+            params=params, pending=pending, pending_count=count, timestamp=ts
+        )
+        if config.track_stats:
+            new_state = update_stats(config, new_state, grad)
+        return new_state, {"tau": tau_scalar, "applied": full}
+
+    if config.use_fused_kernel and config.rule == "fasgd" \
+            and jax.tree.structure(tau) != jax.tree.structure(state.params):
+        # Pallas fast path: eqs. 4-8 fused into one HBM pass per leaf
+        # (kernels/fasgd_update; interpret-mode on CPU).  Semantically equal
+        # to the unfused path below — tests/test_kernels_fasgd.py.
+        from repro.kernels.ops import fasgd_update
+        n32 = jax.tree.map(lambda l: l.astype(jnp.float32), state.n)
+        b32 = jax.tree.map(lambda l: l.astype(jnp.float32), state.b)
+        v32 = jax.tree.map(lambda l: l.astype(jnp.float32), state.v)
+        new_params, n_new, b_new, v_new = fasgd_update(
+            state.params, grad, n32, b32, v32, config.lr, tau,
+            gamma=config.gamma, beta=config.beta, eps=config.eps,
+            variant=config.variant)
+        cast = lambda new, old: jax.tree.map(
+            lambda a, o: a.astype(o.dtype), new, old)
+        new_state = state._replace(
+            params=new_params, n=cast(n_new, state.n), b=cast(b_new, state.b),
+            v=cast(v_new, state.v), timestamp=state.timestamp + 1)
+        scale = effective_scale(
+            config, new_state._replace(v=v_new), tau)
+        aux = {
+            "tau": tau_scalar,
+            "mean_scale": sum(jnp.sum(s) for s in jax.tree.leaves(scale))
+            / float(sum(s.size for s in jax.tree.leaves(scale))),
+        }
+        return new_state, aux
+
+    if config.track_stats or config.rule == "fasgd":
+        state = update_stats(config, state, grad)
+
+    scale = effective_scale(config, state, tau)
+    new_params = jax.tree.map(
+        lambda p, s, g: (p.astype(jnp.float32)
+                         - s * g.astype(jnp.float32)).astype(p.dtype),
+        state.params, scale, grad,
+    )
+    new_state = state._replace(params=new_params, timestamp=state.timestamp + 1)
+    aux = {
+        "tau": tau_scalar,
+        # NB: the count is a python float — >2B-param models overflow an i32
+        # literal if it is staged as an int.
+        "mean_scale": sum(jnp.sum(s) for s in jax.tree.leaves(scale))
+        / float(sum(s.size for s in jax.tree.leaves(scale))),
+    }
+    return new_state, aux
+
+
+def vbar(state: ServerState) -> jnp.ndarray:
+    """Mean over all parameters of the std moving average (B-FASGD's v̄)."""
+    leaves = jax.tree.leaves(state.v)
+    total = sum(jnp.sum(l.astype(jnp.float32)) for l in leaves)
+    return total / float(sum(l.size for l in leaves))

@@ -1,0 +1,46 @@
+"""Staleness measures from the paper (§2.1, §2.2).
+
+Two notions:
+
+* **step-staleness** τ_{i,l} = i − j: the number of server updates elapsed
+  since client l fetched the parameters it used to compute its gradient
+  (Zhang et al. 2015; the quantity SASGD divides by).
+
+* **B-Staleness** Γ(θ_i, Δθ^l) = ||Δθ^l − Δθ_i||: the actual drift between the
+  gradient the client computed and the gradient it *would* have computed on
+  the server's current parameters (same minibatch).  Intractable to observe in
+  a real deployment (it requires recomputing the gradient at θ_i); FASGD
+  proxies it with moving averages of per-parameter gradient std.  We expose an
+  exact oracle for tests/benchmarks, which is cheap in the simulator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def step_staleness(server_timestamp, grad_timestamp):
+    """τ = i − j, clipped to be ≥ 1 so it can be divided by.
+
+    The paper defines τ ≥ 0; a gradient computed on the server's *current*
+    parameters has τ = 0 and SASGD's α/τ is then undefined.  Zhang et al.
+    treat the freshest gradient as τ = 1 (one update will have elapsed once it
+    is applied); we adopt the same convention.
+    """
+    tau = server_timestamp - grad_timestamp
+    return jnp.maximum(tau, 1).astype(jnp.float32)
+
+
+def b_staleness(grad_fn, server_params, client_params, batch):
+    """Exact B-Staleness oracle: Γ = ||∇f(θ_client; batch) − ∇f(θ_server; batch)||.
+
+    `grad_fn(params, batch)` must return a pytree of gradients.  Used by tests
+    and the simulator's diagnostics; never by the production update path.
+    """
+    g_client = grad_fn(client_params, batch)
+    g_server = grad_fn(server_params, batch)
+    sq = sum(
+        jnp.sum((a - b) ** 2)
+        for a, b in zip(jax.tree.leaves(g_client), jax.tree.leaves(g_server))
+    )
+    return jnp.sqrt(sq)

@@ -1,0 +1,2 @@
+from repro.data.mnist import make_synth_mnist, load_mnist, sample_batch
+from repro.data.tokens import TokenDataConfig, synthetic_token_batches

@@ -1,0 +1,81 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in `interpret=True` mode for
+correctness; on TPU they compile natively.  `interpret=None` means
+auto-detect.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fasgd_update as _fk
+from repro.kernels import flash_attention as _fa
+from repro.kernels.ref import fasgd_update_ref, attention_ref
+
+LANES = _fk.LANES
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to_tiles(x: jax.Array, block_rows: int):
+    flat = x.reshape(-1)
+    tile = block_rows * LANES
+    pad = (-flat.size) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), pad
+
+
+def fasgd_update(params: Any, grads: Any, n: Any, b: Any, v: Any, lr, tau,
+                 *, gamma=0.9, beta=0.9, eps=1e-8, variant="intent",
+                 block_rows: int = 256, interpret: bool | None = None):
+    """Fused FASGD update over arbitrary pytrees (leaf-wise kernel launches).
+
+    Semantically identical to `ref.fasgd_update_ref` applied per leaf.
+    """
+    interpret = _auto_interpret(interpret)
+
+    def one(p, g, nn, bb, vv):
+        shape, dtype = p.shape, p.dtype
+        (p2, _), (g2, _) = _pad_to_tiles(p, block_rows), _pad_to_tiles(g, block_rows)
+        (n2, _), (b2, _), (v2, _) = (
+            _pad_to_tiles(nn, block_rows),
+            _pad_to_tiles(bb, block_rows),
+            _pad_to_tiles(vv, block_rows),
+        )
+        rows = min(block_rows, p2.shape[0])
+        po, no, bo, vo = _fk.fasgd_update_2d(
+            p2, g2, n2, b2, v2, lr, tau,
+            gamma=gamma, beta=beta, eps=eps, variant=variant,
+            block_rows=rows, interpret=interpret,
+        )
+        size = p.size
+        unpad = lambda a: a.reshape(-1)[:size].reshape(shape)
+        return unpad(po).astype(dtype), unpad(no), unpad(bo), unpad(vo)
+
+    outs = jax.tree.map(one, params, grads, n, b, v)
+    # outs is a pytree of 4-tuples; transpose to 4 pytrees
+    treedef = jax.tree.structure(params)
+    flat = jax.tree.leaves(outs, is_leaf=lambda x: isinstance(x, tuple))
+    unzip = tuple(jax.tree.unflatten(treedef, [t[i] for t in flat]) for i in range(4))
+    return unzip  # (params, n, b, v)
+
+
+def attention(q, k, v, *, causal=True, window=0, sm_scale=None,
+              block_q=128, block_k=128, interpret: bool | None = None,
+              use_kernel: bool = True):
+    """Flash attention if `use_kernel` else the jnp oracle (same semantics)."""
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, window=window, sm_scale=sm_scale)
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=_auto_interpret(interpret),
+    )

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` of each kernel)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fasgd_update_ref(params, grads, n, b, v, lr, tau,
+                     *, gamma=0.9, beta=0.9, eps=1e-8, variant="intent"):
+    """Unfused FASGD server update (paper eqs. 4–8) on arbitrary arrays.
+
+    Returns (new_params, new_n, new_b, new_v).  Matches
+    `kernels.fasgd_update.fasgd_update_2d` bit-for-bit up to float tolerance.
+    """
+    g = grads.astype(jnp.float32)
+    n_new = gamma * n + (1.0 - gamma) * g * g
+    b_new = gamma * b + (1.0 - gamma) * g
+    std = jnp.sqrt(jnp.maximum(n_new - b_new**2, 0.0) + eps)
+    if variant == "intent":
+        v_new = beta * v + (1.0 - beta) * std
+    else:
+        v_new = beta * v + (1.0 - beta) / std
+    scale = jnp.asarray(lr, jnp.float32) / (v_new * jnp.asarray(tau, jnp.float32) + eps)
+    p_new = (params.astype(jnp.float32) - scale * g).astype(params.dtype)
+    return p_new, n_new, b_new, v_new
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
+    """Reference GQA attention with causal/sliding-window masks.
+
+    q: [B, Hq, Lq, D]; k, v: [B, Hkv, Lk, D].  When Lk > Lq the queries are
+    the *last* Lq positions (decode / prefill-with-cache semantics).
+    """
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lk, _ = k.shape
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * sm_scale
+    q_pos = jnp.arange(Lq)[:, None] + (Lk - Lq)
+    k_pos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible key (possible with tiny windows) → zero output
+    any_visible = mask.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    out = jnp.where(any_visible, out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,226 @@
+"""Roofline-term extraction from a compiled (dry-run) executable.
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+`cost_analysis()` supplies flops and bytes.  Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO text and sum the operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.  Shapes are parsed from the HLO type annotations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  `%x = f32[16,128]{1,0} all-reduce(...)`  or tuple shapes
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[\w\[\]{},\s/#*]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum *output* bytes of every collective op, by kind.
+
+    `-start`/`-done` async pairs are counted once (on the start op); `-done`
+    lines and copies are skipped.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All byte/FLOP quantities are PER DEVICE (cost_analysis and the
+    compiled SPMD module are per-partition — calibrated in tests)."""
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                  # HLO FLOPs per device per step
+    hbm_bytes: float              # bytes accessed per device per step
+    coll_bytes: float             # collective bytes per device per step
+    coll_breakdown: Dict[str, int]
+    per_device_mem: Optional[int] = None   # peak temp+arg bytes per device
+    model_flops: Optional[float] = None    # 6·N·D analytic (GLOBAL)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> Optional[float]:
+        if self.model_flops and self.flops:
+            return (self.model_flops / self.chips) / self.flops
+        return None
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            compute_s=self.compute_s, memory_s=self.memory_s,
+            collective_s=self.collective_s, bottleneck=self.bottleneck,
+            useful_flops_frac=self.useful_flops_frac,
+        )
+        return d
+
+
+def raw_costs(compiled) -> Tuple[float, float, Dict[str, int]]:
+    """(flops, hbm_bytes, collective-bytes breakdown) — all per device.
+
+    NOTE: XLA's cost_analysis counts a while-loop body ONCE regardless of
+    trip count, so these are only exact for fully-unrolled programs.  The
+    dry-run therefore measures costs on small *unrolled* layer counts and
+    extrapolates linearly in L (`extrapolate_costs`)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return flops, hbm, coll
+
+
+def extrapolate_costs(c1, c2, n_units: int):
+    """Linear-in-depth extrapolation: cost(L) = c1 + (n_units − 1)·(c2 − c1)
+    where c1 was measured at 1 unit (+ fixed overhead) and c2 at 2 units.
+
+    Works for scalars and for the collective-breakdown dicts."""
+    if isinstance(c1, dict):
+        return {k: extrapolate_costs(c1[k], c2.get(k, 0), n_units) for k in c1}
+    return c1 + (n_units - 1) * (c2 - c1)
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            compiled, model_flops: Optional[float] = None,
+            costs: Optional[Tuple[float, float, Dict[str, int]]] = None
+            ) -> Roofline:
+    if costs is None:
+        costs = raw_costs(compiled)
+    flops, hbm, coll = costs
+    try:
+        ma = compiled.memory_analysis()
+        per_dev = int(ma.temp_size_in_bytes + ma.argument_size_in_bytes)
+    except Exception:
+        per_dev = None
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops=flops, hbm_bytes=hbm, coll_bytes=float(coll["total"]),
+        coll_breakdown=coll, per_device_mem=per_dev, model_flops=model_flops,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N·D for inference."""
+    from repro.configs.base import INPUT_SHAPES
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    N = active_param_count(cfg)
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        return 6.0 * N * D
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2.0 * N * D
+    D = shape.global_batch * 1      # one token per request
+    return 2.0 * N * D
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: shared + top-k routed only)."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    emb = 2 * V * d
+    if cfg.arch_type in ("ssm", "hybrid"):
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        conv_dim = di + 2 * N
+        per = d * (2 * di + 2 * N + H) + cfg.conv_width * conv_dim + di * d + 2 * di
+        total = L * per + emb
+        if cfg.arch_type == "hybrid":
+            k = cfg.hybrid_attn_every
+            n_apps = L // k
+            hd = cfg.hd
+            attn = (2 * d) * d * 2 + d * cfg.num_heads * hd * 2 \
+                + d * cfg.num_kv_heads * hd * 2 + 3 * d * cfg.d_ff
+            total += n_apps * attn          # shared weights reused n_apps times
+        return int(total)
+    hd = cfg.hd
+    if cfg.use_mla:
+        r, dr = cfg.kv_lora_rank, 64
+        attn = d * cfg.num_heads * (hd + dr) + d * r + r * cfg.num_heads * hd * 2 \
+            + d * dr + cfg.num_heads * hd * d
+    else:
+        attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+            + cfg.num_heads * hd * d
+    if cfg.is_moe:
+        fe = cfg.moe_d_ff or cfg.d_ff
+        k = cfg.num_experts_per_tok + cfg.num_shared_experts
+        ffn = 3 * d * fe * k + d * cfg.num_experts
+    else:
+        ffn = 3 * d * cfg.d_ff
+    return int(L * (attn + ffn) + emb)
+
+
+def total_param_count(cfg) -> int:
+    """All parameters (MoE: every expert)."""
+    if not cfg.is_moe:
+        return active_param_count(cfg)
+    d, L = cfg.d_model, cfg.num_layers
+    fe = cfg.moe_d_ff or cfg.d_ff
+    dense_like = active_param_count(cfg)
+    k = cfg.num_experts_per_tok + cfg.num_shared_experts
+    return int(dense_like + L * 3 * d * fe * (cfg.num_experts - k))

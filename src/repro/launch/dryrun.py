@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+#   This is dry-run-only — tests and benches see the real single CPU device.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) combination this lowers the
+appropriate step function (train_step / prefill / serve_step) with the
+production shardings, compiles it, and records:
+
+ - memory_analysis()  — per-device bytes: proves the config fits HBM;
+ - cost_analysis()    — FLOPs / bytes for the roofline;
+ - the collective schedule (parsed from the optimized HLO) for the
+   collective roofline term.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all              # every pair, subprocesses
+  python -m repro.launch.dryrun --all --multi-pod
+
+Results append to benchmarks/results/dryrun.jsonl (one JSON object per line).
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun.jsonl")
+
+
+def pair_list():
+    """Every (arch, shape) to dry-run, with per-pair config overrides."""
+    from repro.configs import ARCH_NAMES, get_config
+    from repro.configs.base import INPUT_SHAPES
+    pairs = []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape_name, shape in INPUT_SHAPES.items():
+            if shape.kind == "decode" and not cfg.supports_decode():
+                pairs.append((arch, shape_name, None, "encoder-only: no decode"))
+                continue
+            overrides = {}
+            if shape_name == "long_500k" and not cfg.supports_long_context():
+                # dense archs serve 500k with the sliding-window variant
+                overrides["attn_window"] = 8192
+            if shape.kind == "train":
+                overrides["remat"] = True
+            pairs.append((arch, shape_name, overrides, None))
+    return pairs
+
+
+def _compile(cfg, shape, mesh, tc):
+    import jax
+    from repro.launch.steps import shardings_for
+    fn, args, in_shard = shardings_for(cfg, shape, mesh, tc=tc)
+    return jax.jit(fn, in_shardings=in_shard).lower(*args).compile()
+
+
+def cost_extrapolation(cfg, shape, mesh, tc):
+    """Measure per-device costs on 1- and 2-unit *unrolled* variants and
+    extrapolate linearly in depth (XLA counts while bodies once — see
+    analysis.raw_costs).  A 'unit' is one layer, or one (k·mamba + shared
+    attn) group for the hybrid arch; the hybrid's tail remainder is included
+    in both measurements so it lands in the constant term."""
+    import dataclasses as dc
+    from repro.launch.analysis import extrapolate_costs, raw_costs
+    if cfg.arch_type == "hybrid":
+        k = cfg.hybrid_attn_every
+        r = cfg.num_layers % k
+        L1, L2 = k + r, 2 * k + r
+        n_units = cfg.num_layers // k
+    else:
+        L1, L2 = 1, 2
+        n_units = cfg.num_layers
+    costs = []
+    for Ls in (L1, L2):
+        c = dc.replace(cfg, num_layers=Ls, unroll_stack=True)
+        costs.append(raw_costs(_compile(c, shape, mesh, tc)))
+    flops = extrapolate_costs(costs[0][0], costs[1][0], n_units)
+    hbm = extrapolate_costs(costs[0][1], costs[1][1], n_units)
+    coll = extrapolate_costs(costs[0][2], costs[1][2], n_units)
+    return flops, hbm, coll
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_path: str,
+            overrides=None, extra_tc=None, tag: str = "baseline",
+            extrapolate: bool = True):
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import INPUT_SHAPES, TrainerConfig
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import shardings_for
+    from repro.launch.analysis import analyze, model_flops_estimate
+    from repro.sharding import set_mesh_context
+
+    t0 = time.time()
+    cfg = get_config(arch, **(overrides or {}))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+
+    tc = None
+    if extra_tc:
+        tc = TrainerConfig(**extra_tc)
+    set_mesh_context(mesh)
+    try:
+        # 1) the real (scan-based, full-depth) program: proves it compiles
+        #    and fits — memory_analysis comes from this artifact.
+        compiled = _compile(cfg, shape, mesh, tc)
+        # 2) cost terms from unrolled small-depth variants, extrapolated.
+        costs = cost_extrapolation(cfg, shape, mesh, tc) if extrapolate else None
+    finally:
+        set_mesh_context(None)
+
+    mf = model_flops_estimate(cfg, shape)
+    roof = analyze(arch, shape_name, mesh_name, chips, compiled,
+                   model_flops=mf, costs=costs)
+    ma = compiled.memory_analysis()
+    rec = roof.to_dict()
+    rec["extrapolated"] = bool(costs is not None)
+    rec.update(
+        tag=tag,
+        status="ok",
+        compile_s=round(time.time() - t0, 1),
+        mem=dict(
+            arg_bytes=int(ma.argument_size_in_bytes),
+            out_bytes=int(ma.output_size_in_bytes),
+            temp_bytes=int(ma.temp_size_in_bytes),
+            alias_bytes=int(ma.alias_size_in_bytes),
+        ),
+        overrides={k: v for k, v in (overrides or {}).items()},
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+          f"({rec['compile_s']}s compile)")
+    print(f"  memory_analysis: arg={ma.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+          f"out={ma.output_size_in_bytes/2**30:.2f}GiB (per device)")
+    print(f"  cost_analysis:   flops={roof.flops:.3e} bytes={roof.hbm_bytes:.3e} "
+          f"coll_bytes={roof.coll_bytes:.3e}")
+    print(f"  roofline:        compute={roof.compute_s*1e3:.2f}ms "
+          f"memory={roof.memory_s*1e3:.2f}ms "
+          f"collective={roof.collective_s*1e3:.2f}ms → {roof.bottleneck}-bound")
+    return rec
+
+
+def run_all(multi_pod: bool, out_path: str, timeout: int = 3000):
+    done = set()
+    if os.path.exists(out_path):
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        with open(out_path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("mesh") == mesh_name and r.get("status") == "ok" \
+                        and r.get("tag") == "baseline":
+                    done.add((r["arch"], r["shape"]))
+
+    failures = []
+    for arch, shape_name, overrides, skip in pair_list():
+        if skip:
+            print(f"[dryrun] {arch} × {shape_name}: SKIP ({skip})")
+            continue
+        if (arch, shape_name) in done:
+            print(f"[dryrun] {arch} × {shape_name}: cached")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape_name, "--out", out_path]
+        if multi_pod:
+            # the multi-pod pass proves the pod axis shards; roofline terms
+            # come from the single-pod table — skip the cost extrapolation.
+            cmd += ["--multi-pod", "--no-extrapolate"]
+        if overrides:
+            cmd += ["--overrides", json.dumps(overrides)]
+        try:
+            r = subprocess.run(cmd, timeout=timeout)
+            if r.returncode != 0:
+                failures.append((arch, shape_name, f"exit {r.returncode}"))
+        except subprocess.TimeoutExpired:
+            failures.append((arch, shape_name, "timeout"))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("all dry-runs passed")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(RESULTS))
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ModelConfig overrides")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        run_all(args.multi_pod, args.out)
+        return
+    overrides = json.loads(args.overrides) if args.overrides else None
+    if overrides is None:
+        # default per-pair overrides from pair_list
+        for arch, shape_name, ov, skip in pair_list():
+            if arch == args.arch and shape_name == args.shape:
+                if skip:
+                    print(f"SKIP: {skip}")
+                    return
+                overrides = ov
+                break
+    run_one(args.arch, args.shape, args.multi_pod, args.out, overrides=overrides,
+            tag=args.tag, extrapolate=not args.no_extrapolate)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production meshes (TPU v5e).  Functions, not module constants — importing
+this module must never touch jax device state (the dry-run forces 512 host
+devices *before* any jax init; tests must keep seeing 1 device)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """A small mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+# Hardware constants for the roofline analysis (TPU v5e, per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link

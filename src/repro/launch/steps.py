@@ -1,0 +1,206 @@
+"""Step functions + abstract input specs for every (arch × shape) pair.
+
+This is the bridge between the model zoo and the launcher/dry-run:
+
+ - `abstract_params(cfg)` — parameter ShapeDtypeStructs via `jax.eval_shape`
+   (no allocation; a 314B-parameter model "exists" in a few KB of metadata).
+ - `input_specs(cfg, shape)` — ShapeDtypeStruct stand-ins for every model
+   input of a named input shape (train batch / prefill batch / decode step).
+ - `make_train_step(cfg, tc)` — the pod-scale FASGD training step: mean
+   gradient over the batch axes (one all-reduce, identical comms to sync
+   SGD) followed by the FASGD server update (eqs. 4-8).  Every data-parallel
+   group is a "client" pushing simultaneously each round; with no bandwidth
+   gating their copies coincide, so no client copies are materialized
+   (DESIGN.md §2 — the divergent-copy round trainer in `core.round_trainer`
+   is the general case and is exercised at smaller scale).
+ - `make_prefill_step(cfg)` / `make_decode_step(cfg)` — the serving steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, TrainerConfig, INPUT_SHAPES
+from repro.core import rules as server_rules
+from repro.core.rules import ServerConfig, ServerState
+from repro.models.transformer import init_model, loss_fn, forward
+from repro.models.serving import init_cache, prefill, decode_step
+from repro.sharding import (
+    batch_shardings, cache_shardings, param_shardings, state_shardings,
+)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_server_state(cfg: ModelConfig, tc: TrainerConfig):
+    scfg = server_config(tc)
+    params = abstract_params(cfg)
+    st = jax.eval_shape(lambda: server_rules.init(scfg, _zeros_of(params)))
+    if tc.stats_dtype != "float32":
+        dt = jnp.dtype(tc.stats_dtype)
+        st = st._replace(
+            n=jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, dt), st.n),
+            b=jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, dt), st.b),
+            v=jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, dt), st.v),
+        )
+    return st
+
+
+def _zeros_of(abstract_tree):
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), abstract_tree)
+
+
+def server_config(tc: TrainerConfig) -> ServerConfig:
+    return ServerConfig(
+        rule=tc.rule, lr=tc.lr, gamma=tc.gamma, beta=tc.beta, eps=tc.eps,
+        variant=tc.variant, num_clients=tc.num_round_clients,
+    )
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_struct(cfg: ModelConfig, B: int, S: int, *, with_targets: bool) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch matching models.api.make_batch."""
+    if cfg.arch_type == "audio":
+        d = {"frames": _sds((B, S, cfg.frame_embed_dim), cfg.dtype)}
+        if with_targets:
+            d["targets"] = _sds((B, S), jnp.int32)
+        return d
+    if cfg.arch_type == "vlm":
+        Pimg = cfg.num_image_tokens
+        S_text = S - Pimg
+        assert S_text > 0, (S, Pimg)
+        d = {
+            "tokens": _sds((B, S_text), jnp.int32),
+            "image_embeds": _sds((B, Pimg, cfg.image_embed_dim), cfg.dtype),
+        }
+        if with_targets:
+            d["targets"] = _sds((B, S_text), jnp.int32)
+        return d
+    d = {"tokens": _sds((B, S), jnp.int32)}
+    if with_targets:
+        d["targets"] = _sds((B, S), jnp.int32)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str) -> Dict[str, Any]:
+    """Abstract inputs for (cfg, shape): what gets passed to the lowered fn.
+
+    train    → {'batch': ...}
+    prefill  → {'batch': ...}
+    decode   → {'token': [B,1], 'cache': <pytree>, 'pos': scalar}
+    """
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_struct(cfg, B, S, with_targets=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_struct(cfg, B, S, with_targets=False)}
+    assert shape.kind == "decode"
+    assert cfg.supports_decode(), f"{cfg.name} is encoder-only — no decode"
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {
+        "token": _sds((B, 1), jnp.int32),
+        "cache": cache,
+        "pos": _sds((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tc: TrainerConfig):
+    """(server_state, batch) → (server_state, metrics) — pod-scale FASGD."""
+    scfg = server_config(tc)
+
+    def train_step(state: ServerState, batch):
+        def mean_loss(p):
+            loss, metrics = loss_fn(p, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(mean_loss, has_aux=True)(
+            state.params)
+        if tc.stats_dtype != "float32":
+            # keep the MA statistics in the reduced dtype the state carries
+            grads_stats = jax.tree.map(
+                lambda g: g.astype(jnp.dtype(tc.stats_dtype)), grads)
+        else:
+            grads_stats = grads
+        new_state, aux = server_rules.apply_update(
+            scfg, state._replace(), grads_stats, state.timestamp)
+        out_metrics = {
+            "loss": loss, "ce": metrics["ce"], "moe_aux": metrics["moe_aux"],
+            "tau": aux["tau"], "mean_scale": aux["mean_scale"],
+        }
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    if cfg.is_encoder:
+        def encode_step(params, batch):
+            logits, _ = forward(params, cfg, batch)
+            return logits
+        return encode_step
+
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, token, cache, pos):
+        return decode_step(params, cfg, token, cache, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly for the dry-run / launcher
+# ---------------------------------------------------------------------------
+
+def shardings_for(cfg: ModelConfig, shape: InputShape | str, mesh: Mesh,
+                  tc: TrainerConfig | None = None):
+    """→ (fn, abstract_args: tuple, in_shardings: tuple) ready to lower."""
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        tc = tc or TrainerConfig(stats_dtype="bfloat16" if cfg.dtype == jnp.bfloat16
+                                 else "float32")
+        state = abstract_server_state(cfg, tc)
+        fn = make_train_step(cfg, tc)
+        args = (state, specs["batch"])
+        shard = (state_shardings(state, mesh), batch_shardings(specs["batch"], mesh))
+        return fn, args, shard
+
+    params = abstract_params(cfg)
+    pshard = param_shardings(params, mesh)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        args = (params, specs["batch"])
+        shard = (pshard, batch_shardings(specs["batch"], mesh))
+        return fn, args, shard
+
+    fn = make_decode_step(cfg)
+    args = (params, specs["token"], specs["cache"], specs["pos"])
+    shard = (pshard, batch_shardings(specs["token"], mesh, seq_dim=None),
+             cache_shardings(specs["cache"], mesh), repl)
+    return fn, args, shard

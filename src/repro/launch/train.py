@@ -1,0 +1,133 @@
+"""Training driver: FASGD (round-based or pod-sync) on any assigned arch.
+
+Runs for real on whatever devices exist (CPU here, TPU pod in production):
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --smoke \\
+      --steps 100 --clients 4 --rule fasgd --c-fetch 2.0
+
+Modes:
+  --clients C > 0 → the divergent-copy round trainer (core.round_trainer):
+      C client groups, B-FASGD push/fetch gating, real staleness.
+  --clients 0     → the pod-sync FASGD step (launch.steps.make_train_step):
+      one data-parallel gradient + FASGD server update per step.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import TrainerConfig
+from repro.core import rules as server_rules
+from repro.core.round_trainer import build_round_step, init_round_state
+from repro.data.tokens import TokenDataConfig, make_batch as make_token_batch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step, server_config
+from repro.models.api import make_batch, param_count
+from repro.models.transformer import init_model, loss_fn
+from repro.sharding import batch_shardings, param_shardings, set_mesh_context
+
+
+def batch_for_step(cfg, B, S, step):
+    """Deterministic synthetic batch (markov-chain tokens for LM archs,
+    gaussian embeddings for audio/vlm)."""
+    if cfg.arch_type in ("audio", "vlm"):
+        return make_batch(cfg, B, S, jax.random.fold_in(jax.random.PRNGKey(7), step))
+    tcfg = TokenDataConfig(vocab_size=cfg.vocab_size, seq_len=S, batch_size=B)
+    tokens, targets = make_token_batch(tcfg, step)
+    return {"tokens": tokens, "targets": targets}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8, help="global batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--rule", default="fasgd",
+                    choices=["asgd", "sasgd", "fasgd", "exp", "ssgd"])
+    ap.add_argument("--lr", type=float, default=0.005)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="round-trainer client groups; 0 = pod-sync step")
+    ap.add_argument("--apply-mode", default="serial", choices=["serial", "fused"])
+    ap.add_argument("--c-push", type=float, default=0.0)
+    ap.add_argument("--c-fetch", type=float, default=0.0)
+    ap.add_argument("--variant", default="intent", choices=["intent", "literal"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainerConfig(
+        num_round_clients=max(args.clients, 1), rule=args.rule, lr=args.lr,
+        c_push=args.c_push, c_fetch=args.c_fetch, variant=args.variant,
+        seed=args.seed,
+    )
+    mesh = make_host_mesh(data=len(jax.devices()))
+    set_mesh_context(mesh)
+
+    params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    print(f"[train] {cfg.name}: {param_count(params):,} params, "
+          f"rule={args.rule}, clients={args.clients}, mesh={mesh.shape}")
+
+    def grad_fn(p, batch):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, cfg, batch)
+        return loss, g
+
+    if args.clients > 0:
+        state = init_round_state(tc, params)
+        step_fn = jax.jit(build_round_step(tc, grad_fn, apply_mode=args.apply_mode))
+        C = args.clients
+        assert args.batch % C == 0, "global batch must divide clients"
+        Bc = args.batch // C
+
+        start = 0
+        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            state, start, _ = restore_checkpoint(args.ckpt_dir, state)
+            print(f"[train] resumed from step {start}")
+
+        t0 = time.time()
+        for step in range(start, args.steps):
+            flat = batch_for_step(cfg, args.batch, args.seq, step)
+            batch = jax.tree.map(
+                lambda l: l.reshape((C, Bc) + l.shape[1:]), flat)
+            state, m = step_fn(state, batch, jax.random.fold_in(
+                jax.random.PRNGKey(args.seed), step))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"  step {step:5d} loss={float(m['loss']):.4f} "
+                      f"tau={float(m['mean_tau']):.2f} "
+                      f"push={int(m['pushes'])}/{C} fetch={int(m['fetches'])}/{C} "
+                      f"T={int(m['timestamp'])}")
+            if args.ckpt_every and args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step + 1, state)
+        dt = time.time() - t0
+        print(f"[train] done: {args.steps - start} rounds in {dt:.1f}s "
+              f"({(args.steps - start) / max(dt, 1e-9):.2f} rounds/s)")
+    else:
+        scfg = server_config(tc)
+        state = server_rules.init(scfg, params)
+        train_step = jax.jit(make_train_step(cfg, tc))
+        t0 = time.time()
+        for step in range(args.steps):
+            batch = batch_for_step(cfg, args.batch, args.seq, step)
+            state, m = train_step(state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"  step {step:5d} loss={float(m['loss']):.4f} "
+                      f"scale={float(m['mean_scale']):.5f}")
+            if args.ckpt_every and args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step + 1, state.params)
+        dt = time.time() - t0
+        print(f"[train] done: {args.steps} steps in {dt:.1f}s")
+    set_mesh_context(None)
+
+
+if __name__ == "__main__":
+    main()

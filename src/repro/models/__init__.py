@@ -1,0 +1,1 @@
+"""Model zoo: the paper's MLP plus the 10 assigned architectures."""

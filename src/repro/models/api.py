@@ -1,0 +1,42 @@
+"""Public model API + batch construction for every architecture family."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_model, forward, loss_fn
+from repro.models.serving import init_cache, prefill, decode_step, cache_len
+
+
+def make_batch(cfg: ModelConfig, batch_size: int, seq_len: int, key=None):
+    """A real (random but deterministic) training batch for cfg's family.
+
+    For the VLM, `seq_len` is the *total* sequence (image tokens + text).
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.arch_type == "audio":
+        return {
+            "frames": jax.random.normal(k1, (batch_size, seq_len, cfg.frame_embed_dim),
+                                        cfg.dtype),
+            "targets": jax.random.randint(k2, (batch_size, seq_len), 0, cfg.vocab_size),
+        }
+    if cfg.arch_type == "vlm":
+        P = cfg.num_image_tokens
+        S_text = seq_len - P
+        assert S_text > 0, (seq_len, P)
+        return {
+            "tokens": jax.random.randint(k1, (batch_size, S_text), 0, cfg.vocab_size),
+            "image_embeds": jax.random.normal(
+                k2, (batch_size, P, cfg.image_embed_dim), cfg.dtype),
+            "targets": jax.random.randint(k3, (batch_size, S_text), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k1, (batch_size, seq_len), 0, cfg.vocab_size),
+        "targets": jax.random.randint(k2, (batch_size, seq_len), 0, cfg.vocab_size),
+    }
+
+
+def param_count(params) -> int:
+    return sum(l.size for l in jax.tree.leaves(params))

@@ -1,0 +1,257 @@
+"""Attention variants: GQA/MHA (llama family), MLA (deepseek-v2), with
+train / prefill / decode paths and sliding-window + ring-buffer KV caches.
+
+Conventions:
+ - keys are stored in the cache *post-RoPE*, so ring-buffer overwrite (used
+   by sliding-window decode, incl. the dense-arch long_500k configs) is safe;
+ - when `cfg.attn_window > 0` the decode cache is a ring buffer of exactly
+   `window` slots — memory is O(window), not O(seq);
+ - MLA caches the 512-dim compressed latent + the shared rope key
+   (decoupled-RoPE, as in DeepSeek-V2), and decode uses the *absorbed*
+   formulation (q projected into latent space) so per-step FLOPs scale with
+   the latent rank, not with num_heads × head_dim.
+ - long sequences use a q-chunked exact attention (lax.scan over query
+   blocks) to bound activation memory; the Pallas flash kernel
+   (`repro.kernels.flash_attention`) is the TPU-native replacement and is
+   validated against the same oracle in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm, rope
+from repro.sharding.rules import attn_shard_mode, constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    d, H, Kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = cfg.dtype
+    if cfg.use_mla:
+        r, dr = cfg.kv_lora_rank, 64
+        ks = jax.random.split(key, 7)
+        return {
+            "wq_nope": dense_init(ks[0], (d, H, hd), dt),
+            "wq_rope": dense_init(ks[1], (d, H, dr), dt),
+            "w_dkv": dense_init(ks[2], (d, r), dt),
+            "kv_norm": jnp.ones((r,), dt),
+            "w_uk": dense_init(ks[3], (r, H, hd), dt),
+            "w_uv": dense_init(ks[4], (r, H, hd), dt),
+            "w_kr": dense_init(ks[5], (d, dr), dt),
+            "wo": dense_init(ks[6], (H, hd, d), dt),
+        }
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H, hd), dt),
+        "wk": dense_init(ks[1], (d, Kv, hd), dt),
+        "wv": dense_init(ks[2], (d, Kv, hd), dt),
+        "wo": dense_init(ks[3], (H, hd, d), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# exact attention with bounded memory (q-chunked)
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, *, causal, window, q_offset, chunk=512, unroll=False):
+    """q: [B,S,H,hd]; k,v: [B,Sk,Kv,hd] → [B,S,H,hd].
+
+    Exact softmax attention; queries sit at positions q_offset..q_offset+S-1
+    of the key axis.  For S > chunk the query axis is processed in lax.scan
+    chunks so peak memory is O(chunk × Sk), not O(S × Sk).
+    """
+    B, S, H, hd = q.shape
+    _, Sk, Kv, _ = k.shape
+    group = H // Kv
+    scale = 1.0 / (hd ** 0.5)
+    qh = q.reshape(B, S, Kv, group, hd)
+
+    def block(q_blk, q_start):
+        # q_blk: [B, c, Kv, G, hd]
+        s = jnp.einsum("bckgh,bskh->bckgs", q_blk.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        s = constrain(s, "attn")       # batch→data, q-chunk→model: softmax local
+        qpos = q_start + jnp.arange(q_blk.shape[1])[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        mask = jnp.ones((q_blk.shape[1], Sk), bool)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bckgs,bskh->bckgh", p, v.astype(jnp.float32))
+        return constrain(o.astype(q.dtype), "attn")
+
+    if S <= chunk:
+        out = block(qh, 0)
+    else:
+        assert S % chunk == 0, (S, chunk)
+        nq = S // chunk
+        qc = qh.reshape(B, nq, chunk, Kv, group, hd)
+
+        def body(_, inp):
+            q_blk, i = inp
+            return None, block(q_blk, i * chunk)
+
+        _, out = jax.lax.scan(
+            body, None, (jnp.moveaxis(qc, 1, 0), jnp.arange(nq)),
+            unroll=True if unroll else 1,
+        )
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, Kv, group, hd)
+    return out.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA paths
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p, cfg, x, positions):
+    """Full-sequence attention (train / encoder). x: [B,S,d]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if attn_shard_mode() == "heads":
+        # §Perf: pin q/k/v head-sharded so scores/outputs never reshard
+        q, k, v = (constrain(t, "attn") for t in (q, k, v))
+    o = _sdpa(q, k, v, causal=cfg.causal, window=cfg.attn_window, q_offset=0,
+              unroll=cfg.unroll_stack)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def gqa_prefill(p, cfg, x, positions):
+    """Like gqa_forward but also returns the (post-RoPE) KV cache."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if attn_shard_mode() == "heads":
+        q, k, v = (constrain(t, "attn") for t in (q, k, v))
+    o = _sdpa(q, k, v, causal=cfg.causal, window=cfg.attn_window, q_offset=0,
+              unroll=cfg.unroll_stack)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(p, cfg, x, cache, pos):
+    """One-token decode. x: [B,1,d]; cache k/v: [B,W,Kv,hd]; pos: scalar.
+
+    When cfg.attn_window > 0 the cache is a ring buffer of W == window slots
+    written at pos % W; otherwise W == max seq and slot == pos.
+    """
+    B = x.shape[0]
+    W = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+
+    slot = pos % W if cfg.attn_window > 0 else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    group = H // Kv
+    qh = q.reshape(B, Kv, group, hd)
+    s = constrain(
+        jnp.einsum("bkgh,bskh->bkgs", qh.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / (hd ** 0.5), "attn")
+    if cfg.attn_window > 0:
+        # ring buffer: every written slot is within the window by construction
+        valid = jnp.arange(W) < jnp.minimum(pos + 1, W)
+    else:
+        valid = jnp.arange(W) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", pattn, cv.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA paths (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def mla_forward(p, cfg, x, positions):
+    out, _ = mla_prefill(p, cfg, x, positions)
+    return out
+
+
+def mla_prefill(p, cfg, x, positions):
+    """Non-absorbed MLA for full sequences; caches (latent, rope-key)."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    c = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["w_uk"])
+    vv = jnp.einsum("bsr,rhk->bshk", c, p["w_uv"])
+    k_rope = rope(jnp.einsum("bsd,dk->bsk", x, p["w_kr"])[:, :, None, :], positions,
+                  cfg.rope_theta)                          # [B,S,1,dr]
+    q_nope = jnp.einsum("bsd,dhk->bshk", x, p["wq_nope"])
+    q_rope = rope(jnp.einsum("bsd,dhk->bshk", x, p["wq_rope"]), positions, cfg.rope_theta)
+    # fold rope dims into the head dim and reuse the generic sdpa
+    dr = k_rope.shape[-1]
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    o = _sdpa(q_full, k_full,
+              jnp.pad(vv, ((0, 0), (0, 0), (0, 0), (0, dr))),
+              causal=cfg.causal, window=cfg.attn_window, q_offset=0,
+              unroll=cfg.unroll_stack)[..., :hd]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"c": c, "kr": k_rope[:, :, 0, :]}
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    """Absorbed MLA decode: scores/values live in latent space.
+
+    cache: {c: [B, S, r], kr: [B, S, dr]}; x: [B,1,d].
+    """
+    B = x.shape[0]
+    H, hd = cfg.num_heads, cfg.hd
+    S = cache["c"].shape[1]
+    c_t = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    kr_t = rope(jnp.einsum("bsd,dk->bsk", x, p["w_kr"])[:, :, None, :], posv,
+                cfg.rope_theta)[:, :, 0, :]
+    slot = pos % S if cfg.attn_window > 0 else pos     # ring buffer if windowed
+    cc = jax.lax.dynamic_update_slice(cache["c"], c_t, (0, slot, 0))
+    ckr = jax.lax.dynamic_update_slice(cache["kr"], kr_t, (0, slot, 0))
+
+    q_nope = jnp.einsum("bd,dhk->bhk", x[:, 0], p["wq_nope"].astype(x.dtype))
+    q_rope = rope(jnp.einsum("bsd,dhk->bshk", x, p["wq_rope"]), posv, cfg.rope_theta)[:, 0]
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope, p["w_uk"])          # absorb w_uk
+    dr = q_rope.shape[-1]
+    scale = 1.0 / ((hd + dr) ** 0.5)
+    from repro.sharding.rules import attn_shard_mode, constrain_axes, mla_cache_mode
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), cc.astype(jnp.float32))
+         + jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32), ckr.astype(jnp.float32))
+         ) * scale
+    if mla_cache_mode() == "seq":
+        # §Perf flash-decoding mode: keys/scores sharded over the seq dim;
+        # softmax reduces tiny [b,h] stats instead of resharding the cache.
+        s = constrain_axes(s, {0: "batch", 2: "model"})
+    else:
+        s = constrain(s, "attn")
+    if cfg.attn_window > 0:
+        valid = jnp.arange(S) < jnp.minimum(pos + 1, S)
+    else:
+        valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", pattn, cc.astype(jnp.float32)).astype(x.dtype)
+    o = jnp.einsum("bhr,rhk->bhk", lat, p["w_uv"])                  # absorb w_uv
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return out, {"c": cc, "kr": ckr}

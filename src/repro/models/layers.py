@@ -1,0 +1,60 @@
+"""Shared model layers: RMSNorm, RoPE, SwiGLU, embeddings.
+
+Everything is a pure function over explicit param pytrees; initializers take
+a PRNG key and a ModelConfig.  All weights are created in `cfg.dtype`
+(bfloat16 for the full-size dry-run configs, float32 for CPU tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _norm_init(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(fan_in)
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding.  x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_forward(p, x):
+    """SwiGLU MLP (llama family standard)."""
+    gate = jax.nn.silu(x @ p["w_gate"])
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    return dense_init(key, (vocab, d_model), dtype, scale=0.02)

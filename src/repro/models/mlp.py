@@ -1,0 +1,34 @@
+"""The paper's experimental model: a 2-layer MLP (784-200-10, relu, NLL)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, sizes: Sequence[int] = (784, 200, 10)):
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, d_in, d_out in zip(keys, sizes[:-1], sizes[1:]):
+        w = jax.random.normal(k, (d_in, d_out)) * jnp.sqrt(2.0 / d_in)
+        params.append({"w": w, "b": jnp.zeros((d_out,))})
+    return params
+
+
+def apply_mlp(params, x):
+    for layer in params[:-1]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    last = params[-1]
+    return x @ last["w"] + last["b"]
+
+
+def nll_loss(params, x, y):
+    logits = apply_mlp(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def accuracy(params, x, y):
+    logits = apply_mlp(params, x)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))

@@ -1,0 +1,221 @@
+"""Serving runtime: prefill (full sequence → cache) and single-token decode.
+
+Cache layouts (leaves stacked over layers for lax.scan):
+ - GQA:    {"k": [L, B, W, Kv, hd], "v": ...}  — W = attn_window if set
+           (ring buffer) else max_seq; keys stored post-RoPE.
+ - MLA:    {"c": [L, B, S, r], "kr": [L, B, S, dr]} — compressed latent cache.
+ - SSM:    {"h": [L, B, H, P, N], "conv": [L, B, Wc-1, conv_dim]} — O(1) state.
+ - hybrid: {"mamba": ssm-style [Lm, ...], "attn": gqa-style [n_apps, ...]}
+
+`pos` is a traced scalar so one compiled decode step serves every position.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import mlp_forward, rms_norm
+from repro.models.transformer import _embed_inputs, _hybrid_split, _shared_block, _scan, mask_vocab_pad
+from repro.sharding.rules import constrain
+
+
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    return min(max_seq, cfg.attn_window) if cfg.attn_window > 0 else max_seq
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None):
+    """Zero-initialized cache pytree (shapes also used for the dry-run specs)."""
+    dt = dtype or cfg.dtype
+    L, B = cfg.num_layers, batch_size
+    W = cache_len(cfg, max_seq)
+    if cfg.arch_type == "ssm":
+        return _ssm_cache(cfg, L, B, dt)
+    if cfg.arch_type == "hybrid":
+        k, n_groups, rest = _hybrid_split(cfg)
+        return {
+            "mamba": _ssm_cache(cfg, L, B, dt),
+            "attn": _gqa_cache(cfg, n_groups, B, W, dt),
+        }
+    if cfg.use_mla:
+        return {
+            "c": jnp.zeros((L, B, W, cfg.kv_lora_rank), dt),
+            "kr": jnp.zeros((L, B, W, 64), dt),
+        }
+    return _gqa_cache(cfg, L, B, W, dt)
+
+
+def _gqa_cache(cfg, L, B, W, dt):
+    return {
+        "k": jnp.zeros((L, B, W, cfg.num_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((L, B, W, cfg.num_kv_heads, cfg.hd), dt),
+    }
+
+
+def _ssm_cache(cfg, L, B, dt):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "h": jnp.zeros((L, B, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((L, B, cfg.conv_width - 1, conv_dim), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Full-sequence forward that also builds the cache.
+
+    Returns (logits [B, S, V], cache).  Not defined for encoders.
+    """
+    assert cfg.supports_decode(), f"{cfg.name} is encoder-only"
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    x = constrain(x, "bsd")
+
+    if cfg.arch_type == "ssm":
+        def body(carry, lp):
+            h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+            out, st = ssm_mod.ssm_forward(lp["mamba"], cfg, h, return_state=True)
+            return constrain(carry + out, "bsd"), st
+        x, cache = _scan(cfg, body, x, params["layers"])
+
+    elif cfg.arch_type == "hybrid":
+        k, n_groups, rest = _hybrid_split(cfg)
+        emb0 = x
+        grouped = jax.tree.map(
+            lambda l: l[: n_groups * k].reshape((n_groups, k) + l.shape[1:]),
+            params["layers"])
+        tail = jax.tree.map(lambda l: l[n_groups * k:], params["layers"])
+        sp = params["shared"]
+
+        def inner(carry, lp):
+            h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+            out, st = ssm_mod.ssm_forward(lp["mamba"], cfg, h, return_state=True)
+            return carry + out, st
+
+        def outer(carry, glp):
+            h, states = _scan(cfg, inner, carry, glp)
+            y = jnp.einsum("bsd,dk->bsk", jnp.concatenate([h, emb0], axis=-1),
+                           sp["in_proj"])
+            a, kv = attn.gqa_prefill(sp["attn"], cfg,
+                                     rms_norm(y, sp["ln1"], cfg.norm_eps), positions)
+            y = y + a
+            y = y + mlp_forward(sp["mlp"], rms_norm(y, sp["ln2"], cfg.norm_eps))
+            return h + y, (states, kv)
+
+        x, (m_states, a_caches) = _scan(cfg, outer, x, grouped)
+        # m_states leaves: [n_groups, k, B, ...] → flatten to [n_groups*k, ...]
+        m_states = jax.tree.map(lambda l: l.reshape((-1,) + l.shape[2:]), m_states)
+        if rest:
+            x, tail_states = _scan(cfg, inner, x, tail)
+            m_states = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), m_states, tail_states)
+        cache = {"mamba": m_states, "attn": a_caches}
+
+    else:
+        def body(carry, lp):
+            x = carry
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, kv = attn.mla_prefill(lp["attn"], cfg, h, positions)
+            else:
+                a, kv = attn.gqa_prefill(lp["attn"], cfg, h, positions)
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                h, _ = moe_mod.moe_forward(lp["moe"], cfg, h)
+            else:
+                h = mlp_forward(lp["mlp"], h)
+            return constrain(x + h, "bsd"), kv
+        x, cache = _scan(cfg, body, x, params["layers"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = constrain(jnp.einsum("bsd,dv->bsv", x, params["unembed"]), "bsv")
+    return mask_vocab_pad(cfg, logits), cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    """One decode step.  token: [B, 1] int32; pos: scalar int32 (next position).
+
+    Returns (logits [B, 1, V], new_cache).
+    """
+    assert cfg.supports_decode(), f"{cfg.name} is encoder-only"
+    x = params["embed"][token]
+
+    if cfg.arch_type == "ssm":
+        def body(carry, inp):
+            lp, st = inp
+            h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+            out, st = ssm_mod.ssm_decode(lp["mamba"], cfg, h, st, pos)
+            return carry + out, st
+        x, cache = _scan(cfg, body, x, (params["layers"], cache))
+
+    elif cfg.arch_type == "hybrid":
+        k, n_groups, rest = _hybrid_split(cfg)
+        emb0 = x
+        grouped = jax.tree.map(
+            lambda l: l[: n_groups * k].reshape((n_groups, k) + l.shape[1:]),
+            params["layers"])
+        tail = jax.tree.map(lambda l: l[n_groups * k:], params["layers"])
+        m_grouped = jax.tree.map(
+            lambda l: l[: n_groups * k].reshape((n_groups, k) + l.shape[1:]),
+            cache["mamba"])
+        m_tail = jax.tree.map(lambda l: l[n_groups * k:], cache["mamba"])
+        sp = params["shared"]
+
+        def inner(carry, inp):
+            lp, st = inp
+            h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+            out, st = ssm_mod.ssm_decode(lp["mamba"], cfg, h, st, pos)
+            return carry + out, st
+
+        def outer(carry, inp):
+            glp, gst, kv = inp
+            h, gst = _scan(cfg, inner, carry, (glp, gst))
+            y = jnp.einsum("bsd,dk->bsk", jnp.concatenate([h, emb0], axis=-1),
+                           sp["in_proj"])
+            a, kv = attn.gqa_decode(sp["attn"], cfg,
+                                    rms_norm(y, sp["ln1"], cfg.norm_eps), kv, pos)
+            y = y + a
+            y = y + mlp_forward(sp["mlp"], rms_norm(y, sp["ln2"], cfg.norm_eps))
+            return h + y, (gst, kv)
+
+        x, (m_new, a_new) = _scan(cfg, outer, x, (grouped, m_grouped, cache["attn"]))
+        m_new = jax.tree.map(lambda l: l.reshape((-1,) + l.shape[2:]), m_new)
+        if rest:
+            x, t_new = _scan(cfg, inner, x, (tail, m_tail))
+            m_new = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                                 m_new, t_new)
+        cache = {"mamba": m_new, "attn": a_new}
+
+    else:
+        def body(carry, inp):
+            lp, kv = inp
+            x = carry
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, kv = attn.mla_decode(lp["attn"], cfg, h, kv, pos)
+            else:
+                a, kv = attn.gqa_decode(lp["attn"], cfg, h, kv, pos)
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                h, _ = moe_mod.moe_forward(lp["moe"], cfg, h)
+            else:
+                h = mlp_forward(lp["mlp"], h)
+            return x + h, kv
+        x, cache = _scan(cfg, body, x, (params["layers"], cache))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return mask_vocab_pad(cfg, logits), cache

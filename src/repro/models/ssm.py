@@ -1,0 +1,218 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: the sequence is split into chunks; within a chunk the recurrence
+is computed in its dual quadratic-attention form (MXU-friendly), and a single
+`lax.scan` over chunk *states* handles the cross-chunk recurrence — O(L·cs)
+work, O(L/cs) sequential steps, exactly matching the naive recurrence (tested
+against `ssd_naive`).  Decode is the O(1)-per-step recurrence on the cached
+state.  n_groups = 1 (B/C shared across heads).
+
+Layout: d_inner = expand·d_model, heads H = d_inner / headdim P, state N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding.rules import constrain, constrain_axes
+
+
+def init_ssm(key, cfg):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt = cfg.dtype
+    ks = jax.random.split(key, 5)
+    conv_dim = di + 2 * N
+    return {
+        # order: [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_dim), dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))).astype(dt),
+        "out_norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _split(cfg, zxbcdt):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along seq. xbc: [B, L, C]; w: [W, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def segsum_exp(a):
+    """exp(segment-sums): L[i, j] = exp(Σ_{j<m≤i} a_m) for i ≥ j else 0.
+
+    a: [..., cs] → [..., cs, cs] lower-triangular decay matrix.
+    """
+    cs = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)                       # [..., cs]
+    diff = cum[..., :, None] - cum[..., None, :]       # Σ_{m≤i} − Σ_{m≤j}
+    tril = jnp.tril(jnp.ones((cs, cs), bool), k=0)
+    # mask *before* exp: exp of the (large positive) upper-triangular entries
+    # would overflow and poison gradients via inf·0 → nan.
+    return jnp.exp(jnp.where(tril, diff, -jnp.inf))
+
+
+def ssd_chunked(x, dt, A, B, C, chunk_size: int, h0=None, unroll: bool = False):
+    """SSD scan.  x: [b,L,H,P], dt: [b,L,H] (>0), A: [H] (<0),
+    B,C: [b,L,N].  Returns (y: [b,L,H,P], h_final: [b,H,P,N]).
+
+    Discretization: h_t = exp(dt·A)·h_{t−1} + dt·B_t ⊗ x_t ;  y_t = C_t·h_t + D x
+    (D is added by the caller).
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    cs = min(chunk_size, L)
+    L0 = L
+    pad = (-L) % cs
+    if pad:
+        # zero-pad the tail: dt=0 => decay=exp(0)=1 and xb=0, so padded
+        # positions change neither the states nor the real outputs.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        L = L + pad
+    nc = L // cs
+
+    xb = constrain_axes((x * dt[..., None]).reshape(b, nc, cs, H, P),
+                        {0: "batch", 3: "model"})          # dt-scaled input
+    dA = constrain_axes((dt * A[None, None, :]).reshape(b, nc, cs, H),
+                        {0: "batch", 3: "model"})          # [b,nc,cs,H] (<0)
+    Bc = B.reshape(b, nc, cs, N)
+    Cc = C.reshape(b, nc, cs, N)
+
+    # --- intra-chunk (quadratic dual form) ---
+    Lmat = constrain_axes(segsum_exp(jnp.moveaxis(dA, 3, 2)),
+                          {0: "batch", 2: "model"})        # [b,nc,H,cs,cs]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)         # [b,nc,cs,cs]
+    y_diag = constrain_axes(
+        jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, Lmat, xb),
+        {0: "batch", 3: "model"})
+
+    # --- chunk states: S_c = Σ_j exp(cum_last − cum_j) · B_j ⊗ xb_j ---
+    cum = jnp.cumsum(dA, axis=2)                           # [b,nc,cs,H]
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [b,nc,cs,H]
+    S = constrain_axes(jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, decay_to_end, xb),
+                       {0: "batch", 2: "model"})
+
+    # --- inter-chunk recurrence over chunk states ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [b,nc,H]
+
+    def body(h, inp):
+        S_c, dec_c = inp
+        h_new = h * dec_c[:, :, None, None] + S_c
+        return h_new, h                                     # emit state *before* chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    h_fin, h_prevs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=True if unroll else 1,
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # [b,nc,H,P,N]
+
+    # --- contribution of carried state to each position ---
+    state_decay = jnp.exp(cum)                             # [b,nc,cs,H]
+    y_off = constrain_axes(
+        jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, state_decay, h_prevs),
+        {0: "batch", 3: "model"})
+
+    y = (y_diag + y_off).reshape(b, L, H, P)[:, :L0]
+    return y, h_fin
+
+
+def ssd_naive(x, dt, A, B, C, h0=None):
+    """Step-by-step recurrence oracle for tests."""
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    h = jnp.zeros((b, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp        # [b,H,P], [b,H], [b,N], [b,N]
+        decay = jnp.exp(dt_t * A)        # [b,H]
+        h = h * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", x_t * dt_t[..., None], B_t)
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def ssm_forward(p, cfg, x, h0=None, conv0=None, return_state: bool = False):
+    """Full-sequence Mamba2 block. x: [B, L, d] → [B, L, d].
+
+    If return_state, also returns {"h": [B,H,P,N], "conv": [B,W-1,conv_dim]}.
+    """
+    B_, L, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"])
+    z, xbc, dtr = _split(cfg, zxbcdt)
+    if conv0 is not None:
+        xbc_in = jnp.concatenate([conv0, xbc], axis=1)
+        conv_out = _causal_conv(xbc_in, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    conv_out = constrain(conv_out, "bsd")
+    xs = conv_out[..., :cfg.d_inner].reshape(B_, L, H, P)
+    Bmat = conv_out[..., cfg.d_inner:cfg.d_inner + N]
+    Cmat = conv_out[..., cfg.d_inner + N:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, h_fin = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                           Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                           cfg.ssm_chunk, h0=h0, unroll=cfg.unroll_stack)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, L, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"])
+    if return_state:
+        W = cfg.conv_width
+        conv_tail = (jnp.concatenate([conv0, xbc], axis=1) if conv0 is not None else
+                     jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0))))[:, -(W - 1):]
+        return out, {"h": h_fin, "conv": conv_tail}
+    return out
+
+
+def ssm_decode(p, cfg, x, state, pos):
+    """One-token recurrence. x: [B,1,d]; state: {"h": [B,H,P,N], "conv": [B,W-1,C]}."""
+    B_ = x.shape[0]
+    H, P, N, W = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.conv_width
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"])
+    z, xbc, dtr = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([state["conv"], xbc], axis=1)      # [B, W, C]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]                                                # [B,1,C]
+    xs = conv_out[..., :cfg.d_inner].reshape(B_, H, P)
+    Bmat = conv_out[:, 0, cfg.d_inner:cfg.d_inner + N]
+    Cmat = conv_out[:, 0, cfg.d_inner + N:]
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    decay = jnp.exp(dt * A)                                      # [B,H]
+    h = state["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xs.astype(jnp.float32) * dt[..., None], Bmat.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cmat.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"])
+    return out, {"h": h, "conv": conv_in[:, 1:]}

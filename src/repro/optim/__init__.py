@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    OptState,
+    sgd,
+    momentum,
+    rmsprop_graves,
+    adam,
+    get_optimizer,
+)

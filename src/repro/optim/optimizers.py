@@ -1,0 +1,110 @@
+"""Baseline optimizers as pure (init, update) pairs over pytrees.
+
+These serve the synchronous baseline and the paper's RMSProp lineage
+(FASGD's eqs. 4-6 are the Graves (2013) RMSProp statistics applied at the
+*server*; `rmsprop_graves` here is the same statistics applied at a single
+worker, which makes the connection testable: with one client and τ≡1 the
+FASGD server equals rmsprop_graves up to the extra β-smoothing of v).
+
+Each optimizer is ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    new_params, new_state = update_fn(params, grads, state)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any = None      # 1st-moment / momentum buffer
+    n: Any = None      # 2nd-moment buffer
+    v: Any = None      # std moving average (graves)
+
+
+def _zeros(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd(lr: float):
+    def init_fn(params):
+        return OptState(step=jnp.zeros((), jnp.int32))
+
+    def update_fn(params, grads, state):
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new, OptState(step=state.step + 1)
+
+    return init_fn, update_fn
+
+
+def momentum(lr: float, mu: float = 0.9, nesterov: bool = False):
+    def init_fn(params):
+        return OptState(step=jnp.zeros((), jnp.int32), m=_zeros(params))
+
+    def update_fn(params, grads, state):
+        m = jax.tree.map(lambda b, g: mu * b + g, state.m, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda b, g: mu * b + g, m, grads)
+        else:
+            upd = m
+        new = jax.tree.map(lambda p, u: p - lr * u, params, upd)
+        return new, OptState(step=state.step + 1, m=m)
+
+    return init_fn, update_fn
+
+
+def rmsprop_graves(lr: float, gamma: float = 0.95, eps: float = 1e-4):
+    """RMSProp as in Graves (2013) — the version the paper cites for FASGD:
+    divide by sqrt(MA(g²) − MA(g)² + eps), i.e. a running *std*, not a
+    running rms."""
+
+    def init_fn(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=_zeros(params), n=_zeros(params))
+
+    def update_fn(params, grads, state):
+        n = jax.tree.map(lambda a, g: gamma * a + (1 - gamma) * g * g, state.n, grads)
+        m = jax.tree.map(lambda a, g: gamma * a + (1 - gamma) * g, state.m, grads)
+        new = jax.tree.map(
+            lambda p, g, nn, mm: p - lr * g / jnp.sqrt(jnp.maximum(nn - mm * mm, 0.0) + eps),
+            params, grads, n, m,
+        )
+        return new, OptState(step=state.step + 1, m=m, n=n)
+
+    return init_fn, update_fn
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init_fn(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=_zeros(params), n=_zeros(params))
+
+    def update_fn(params, grads, state):
+        t = state.step + 1
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state.m, grads)
+        n = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, state.n, grads)
+        tf = t.astype(jnp.float32)
+        c1 = 1.0 - b1 ** tf
+        c2 = 1.0 - b2 ** tf
+        new = jax.tree.map(
+            lambda p, mm, nn: p - lr * (mm / c1) / (jnp.sqrt(nn / c2) + eps),
+            params, m, n,
+        )
+        return new, OptState(step=t, m=m, n=n)
+
+    return init_fn, update_fn
+
+
+_REGISTRY: dict[str, Callable] = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "rmsprop_graves": rmsprop_graves,
+    "adam": adam,
+}
+
+
+def get_optimizer(name: str, lr: float, **kwargs):
+    return _REGISTRY[name](lr, **kwargs)

@@ -1,0 +1,357 @@
+"""Named-axis sharding rules with divisibility fallbacks.
+
+Philosophy (DESIGN.md §5): one *generic* rule derives a PartitionSpec from a
+leaf's key path + shape instead of a hand-written table per architecture —
+ten architectures × hundreds of leaves make tables unmaintainable.  The rule
+implements FSDP-style "shard everything":
+
+ - the **last** dim divisible by the `model` axis size → `"model"`
+   (the wide/output dim; TPU lane-friendly);
+ - the **largest remaining** dim divisible by the data axes → `"data"`
+   (or `("data", "pod")` in multi-pod meshes — the pod axis folds into
+   FSDP/batch, DESIGN.md §5);
+ - leaves under a stacked-scan prefix (`layers/...`) never shard dim 0
+   (it is the `lax.scan` axis);
+ - any dim that fails divisibility falls back to replication *for that dim
+   only* — e.g. mamba2's vocab 50280 is not 16-divisible, so the embedding
+   shards only d_model.
+
+Activation constraints: model code calls `constrain(x, kind)` at layer
+boundaries / MoE dispatch buffers; it is a no-op unless a mesh context was
+installed via `set_mesh_context` (the launcher/dry-run does; unit tests on
+one CPU device don't).  This is what keeps stored scan carries fully
+sharded so 314B-parameter training fits HBM.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# mesh context (for activation constraints inside model code)
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+def set_mesh_context(mesh: Optional[Mesh]):
+    _ctx.mesh = mesh
+
+
+def get_mesh_context() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = get_mesh_context()
+    set_mesh_context(mesh)
+    try:
+        yield
+    finally:
+        set_mesh_context(prev)
+
+
+# ---------------------------------------------------------------------------
+# §Perf iteration switches (baseline = unset; see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+_modes = {"attn": None, "mla_cache": None}
+
+
+def set_attn_shard_mode(mode: Optional[str]):
+    """'qchunk' (baseline) | 'heads' (prefer head-dim sharding)."""
+    _modes["attn"] = mode
+
+
+def attn_shard_mode() -> str:
+    return _modes["attn"] or os.environ.get("REPRO_ATTN_SHARD", "qchunk")
+
+
+def set_mla_cache_mode(mode: Optional[str]):
+    """'rank' (baseline: latent rank → model) | 'seq' (window → model,
+    flash-decoding style partial-softmax reduction)."""
+    _modes["mla_cache"] = mode
+
+
+def mla_cache_mode() -> str:
+    return _modes["mla_cache"] or os.environ.get("REPRO_MLA_CACHE", "rank")
+
+
+def moe_dispatch_mode() -> str:
+    """'ecd' (baseline: capacity→data, d→model) | 'dmodel' (d→model only)
+    | 'wstat' (weight-stationary: d→data so the expert contraction happens
+    against in-place FSDP weight shards and only tiny [E,C,f] partial sums
+    are all-reduced — the right trade for small decode batches, §Perf)."""
+    return _modes.get("moe") or os.environ.get("REPRO_MOE_DISPATCH", "ecd")
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    """Size of an axis or tuple of axes (product); 1 if absent."""
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= axis_size(mesh, n)
+        return s
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def batch_axes(mesh: Mesh):
+    """The axes the batch dim shards over: ("pod","data") when pod exists."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# parameter rule
+# ---------------------------------------------------------------------------
+
+_STACKED_PREFIXES = ("layers", "mamba", "attn")   # scan-stacked leading dims
+
+
+def _is_stacked(path: str) -> bool:
+    first = path.split("/", 1)[0].strip("'[]\"")
+    return first in _STACKED_PREFIXES or path.startswith("client_params")
+
+
+def leaf_param_spec(path: str, shape: Sequence[int], mesh: Mesh) -> P:
+    """Generic FSDP rule: last divisible dim → model, largest rest → data."""
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    start = 1 if (_is_stacked(path) and ndim >= 2) else 0
+    model_n = axis_size(mesh, "model")
+    spec: list = [None] * ndim
+
+    # model: scan dims from the end
+    for i in range(ndim - 1, start - 1, -1):
+        if shape[i] >= model_n and shape[i] % model_n == 0:
+            spec[i] = "model"
+            break
+
+    # data (+pod folded in): largest remaining divisible dim
+    for data_ax in (("data", "pod") if "pod" in mesh.axis_names else ("data",),
+                    ("data",)):
+        dn = axis_size(mesh, data_ax)
+        cands = [
+            i for i in range(start, ndim)
+            if spec[i] is None and shape[i] >= dn and shape[i] % dn == 0
+        ]
+        if cands:
+            i = max(cands, key=lambda j: shape[j])
+            spec[i] = data_ax if len(data_ax) > 1 else data_ax[0]
+            break
+
+    return P(*spec)
+
+
+def _paths_and_leaves(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path), leaf
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpec matching `params` (works on ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(leaf_param_spec(p, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+def state_shardings(state, mesh: Mesh):
+    """Shardings for a ServerState / RoundState: params-like leaves use the
+    param rule (this covers n/b/v stats and stacked client copies), scalars
+    replicate."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    specs = []
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if leaf.ndim == 0 or leaf.size <= 64:
+            specs.append(P())
+        else:
+            specs.append(leaf_param_spec(p, leaf.shape, mesh))
+    specs = jax.tree_util.tree_unflatten(treedef, specs)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def _div(n: int, by: int) -> bool:
+    return n >= by and n % by == 0
+
+
+def batch_spec(shape: Sequence[int], mesh: Mesh, *, seq_dim: Optional[int] = None) -> P:
+    """Shard dim 0 (batch) over the batch axes; fall back to `data` alone,
+    then to sharding the sequence dim (context parallelism — long_500k's
+    batch=1 case), then replicate."""
+    b = shape[0]
+    ba = batch_axes(mesh)
+    spec: list = [None] * len(shape)
+    if _div(b, axis_size(mesh, ba)):
+        spec[0] = ba if len(ba) > 1 else ba[0]
+    elif _div(b, axis_size(mesh, "data")):
+        spec[0] = "data"
+    elif seq_dim is not None and _div(shape[seq_dim], axis_size(mesh, ba)):
+        spec[seq_dim] = ba if len(ba) > 1 else ba[0]
+    return P(*spec)
+
+
+def batch_shardings(batch, mesh: Mesh, *, seq_dim: Optional[int] = 1):
+    def one(leaf):
+        sd = seq_dim if (leaf.ndim > (seq_dim or 0)) else None
+        return NamedSharding(mesh, batch_spec(leaf.shape, mesh, seq_dim=sd))
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache, mesh: Mesh):
+    """KV/SSM cache rule.  Leaves are [L, B, W, ...] (stacked over layers).
+
+    batch → data when divisible; else the window/seq dim → data (context
+    parallelism).  The innermost dim (head_dim / latent rank / ssm state)
+    → model when divisible; else try the second-innermost (kv heads).
+    """
+    model_n = axis_size(mesh, "model")
+    ba = batch_axes(mesh)
+
+    def one_spec(path, leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        spec: list = [None] * ndim
+        # dim 0 is the layer-stack dim: never sharded.
+        # §Perf 'seq' mode (MLA latent caches [L,B,W,r]): shard the window
+        # dim over model (flash-decoding style) instead of the rank — scores
+        # then partial-reduce over tiny [b,h] stats instead of resharding
+        # the whole cache every step.
+        if mla_cache_mode() == "seq" and ndim == 4 and path in ("c", "kr") \
+                and _div(shape[2], model_n):
+            spec[2] = "model"
+        else:
+            # model: innermost dim, else second innermost
+            for i in (ndim - 1, ndim - 2):
+                if i >= 2 and _div(shape[i], model_n):
+                    spec[i] = "model"
+                    break
+        # data: batch dim (1), else the longest remaining dim ≥2
+        dn = axis_size(mesh, ba)
+        if ndim >= 2 and _div(shape[1], dn):
+            spec[1] = ba if len(ba) > 1 else ba[0]
+        elif ndim >= 2 and _div(shape[1], axis_size(mesh, "data")):
+            spec[1] = "data"
+        else:
+            cands = [i for i in range(2, ndim) if spec[i] is None and _div(shape[i], dn)]
+            if cands:
+                i = max(cands, key=lambda j: shape[j])
+                spec[i] = ba if len(ba) > 1 else ba[0]
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        last = str(getattr(path[-1], "key", "")) if path else ""
+        specs.append(one_spec(last, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs(cache, mesh))
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (called from model code)
+# ---------------------------------------------------------------------------
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Sharding constraint at a named activation site; no-op without context.
+
+    kinds:
+      'bsd'  — [batch, seq, d_model]: batch→batch_axes, d→model
+      'bsv'  — [batch, seq, vocab]:   batch→batch_axes, vocab→model
+      'ecd'  — [experts, capacity, d]: capacity→batch_axes, d→model
+      'attn' — attention scores/outputs [batch, ...]: batch→batch_axes,
+               model→ the first divisible dim scanning 1..n-1 (the query
+               chunk / head dim — keeps softmax over keys local)
+      'grad' — parameter-shaped gradient leaf: generic param rule
+    """
+    mesh = get_mesh_context()
+    if mesh is None:
+        return x
+    model_n = axis_size(mesh, "model")
+    ba = batch_axes(mesh)
+    ba_spec = ba if len(ba) > 1 else ba[0]
+    bn = axis_size(mesh, ba)
+
+    if kind in ("bsd", "bsv", "ecd"):
+        bdim = 0 if kind != "ecd" else 1
+        last = x.shape[-1]
+        spec = [None] * x.ndim
+        if kind == "ecd" and moe_dispatch_mode() == "dmodel":
+            bdim = None              # §Perf: keep capacity unsharded so the
+                                     # dispatch scatter is data-local
+        if kind == "ecd" and moe_dispatch_mode() == "wstat":
+            spec = [None] * x.ndim
+            if _div(last, axis_size(mesh, "data")):
+                spec[-1] = "data"    # match the weights' contraction dim
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+        if bdim is not None and _div(x.shape[bdim], bn):
+            spec[bdim] = ba_spec
+        elif kind == "bsd" and _div(x.shape[1], bn):
+            spec[1] = ba_spec        # context parallelism (batch=1 long seq)
+        if _div(last, model_n):
+            spec[-1] = "model"
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+    if kind == "attn":
+        spec = [None] * x.ndim
+        if _div(x.shape[0], bn):
+            spec[0] = ba_spec
+        if attn_shard_mode() == "heads":
+            # §Perf iteration: prefer the *head* dims (2..n−2) so q/k/v,
+            # scores and outputs stay head-sharded end-to-end — no per-chunk
+            # resharding collectives; softmax (last dim) stays local.
+            order = list(range(2, x.ndim - 1)) + [1]
+        else:
+            # baseline: first divisible dim (usually the q-chunk dim)
+            order = list(range(1, x.ndim))
+        for i in order:
+            if i < x.ndim and _div(x.shape[i], model_n):
+                spec[i] = "model"
+                break
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+    if kind == "grad":
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, leaf_param_spec("", x.shape, mesh)))
+    raise ValueError(kind)
+
+
+def constrain_axes(x: jax.Array, axes: dict) -> jax.Array:
+    """Explicit per-dim constraint: {dim: 'batch'|'model'}.  Dims that fail
+    divisibility are silently left unsharded; no-op without a mesh context."""
+    mesh = get_mesh_context()
+    if mesh is None:
+        return x
+    model_n = axis_size(mesh, "model")
+    ba = batch_axes(mesh)
+    ba_spec = ba if len(ba) > 1 else ba[0]
+    bn = axis_size(mesh, ba)
+    spec = [None] * x.ndim
+    for dim, role in axes.items():
+        if role == "batch" and _div(x.shape[dim], bn):
+            spec[dim] = ba_spec
+        elif role == "model" and _div(x.shape[dim], model_n):
+            spec[dim] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,1 @@
+from repro.sim.fred import SimConfig, SimState, run_simulation, build_step_fn, init_sim

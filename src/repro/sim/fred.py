@@ -1,0 +1,294 @@
+"""FRED-in-JAX: deterministic single-node simulation of distributed SGD.
+
+This is the paper's §3 experimental vehicle rebuilt as a pure-JAX program:
+the (server, λ clients, dispatcher) system is a single fixed-shape pytree
+advanced by `jax.lax.scan`, so every run is bitwise reproducible from its
+seed, on one machine, with no real network.
+
+Semantics follow the paper's Async SGD protocol:
+
+* each simulation step = one client finishing one minibatch gradient;
+* the dispatcher decides *which* client that is (uniform / round-robin /
+  heterogeneous-speed schedules);
+* the gradient is computed on the parameters that client fetched at its last
+  interaction — its *stale* copy — and carries that copy's timestamp;
+* the server applies the update under the configured rule (ASGD / SASGD /
+  FASGD / exp-penalty / sync) and the client receives the new parameters —
+  unless B-FASGD gating drops the push and/or the fetch (paper §2.3).
+
+Dropped pushes follow the paper's server-side gradient cache by default
+(`drop_policy='cache'`: re-apply that client's most recent transmitted
+gradient), or `'skip'` (no server update at that opportunity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rules as server_rules
+from repro.core.bandwidth import BandwidthConfig, per_tensor_fetch_mask, transmit_prob
+from repro.core.rules import ServerConfig, ServerState
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    num_clients: int = 4
+    batch_size: int = 32
+    server: ServerConfig = ServerConfig()
+    bandwidth: BandwidthConfig = BandwidthConfig()
+    dispatcher: str = "uniform"   # 'uniform' | 'roundrobin' | 'heterogeneous'
+    het_skew: float = 1.5         # log-speed std for the heterogeneous schedule
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.dispatcher in ("uniform", "roundrobin", "heterogeneous")
+        if self.server.rule == "ssgd":
+            # Sync SGD only makes sense with a fair schedule.
+            assert self.dispatcher == "roundrobin", "ssgd requires roundrobin"
+
+
+class Counters(NamedTuple):
+    push_potential: jnp.ndarray
+    push_actual: jnp.ndarray
+    fetch_potential: jnp.ndarray
+    fetch_actual: jnp.ndarray
+    # per-tensor mode: byte-resolution accounting (floats)
+    fetch_bytes_sent: jnp.ndarray = jnp.zeros((), jnp.float32)
+    fetch_bytes_total: jnp.ndarray = jnp.zeros((), jnp.float32)
+
+
+class SimState(NamedTuple):
+    server: ServerState
+    client_params: Any            # pytree, leaves [λ, ...]
+    client_ts: jnp.ndarray        # [λ] int32 — timestamp of each client's copy
+    grad_cache: Optional[Any]     # pytree [λ, ...] or None (cache drop policy)
+    rr_pos: jnp.ndarray           # int32, round-robin cursor
+    counters: Counters
+    # per-tensor fetch mode (§5 extension): [λ, n_leaves] int32 — the
+    # timestamp at which each TENSOR of each client's copy last synchronized.
+    client_leaf_ts: Optional[jnp.ndarray] = None
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(lambda l: l[i], tree)
+
+
+def _tree_set(tree, i, val):
+    return jax.tree.map(lambda l, v: l.at[i].set(v), tree, val)
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _tree_stack(tree, n):
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), tree)
+
+
+def init_sim(config: SimConfig, params) -> SimState:
+    lam = config.num_clients
+    server = server_rules.init(config.server, params)
+    use_cache = config.bandwidth.c_push > 0 and config.bandwidth.drop_policy == "cache"
+    zero = jnp.zeros((), jnp.int32)
+    zf = jnp.zeros((), jnp.float32)
+    return SimState(
+        server=server,
+        client_params=_tree_stack(params, lam),
+        client_ts=jnp.zeros((lam,), jnp.int32),
+        grad_cache=jax.tree.map(jnp.zeros_like, _tree_stack(params, lam))
+        if use_cache
+        else None,
+        rr_pos=zero,
+        counters=Counters(zero, zero, zero, zero, zf, zf),
+        client_leaf_ts=(jnp.zeros((lam, len(jax.tree.leaves(params))), jnp.int32)
+                        if config.bandwidth.per_tensor_fetch else None),
+    )
+
+
+def _dispatch(config: SimConfig, state: SimState, key):
+    lam = config.num_clients
+    if config.dispatcher == "roundrobin":
+        return state.rr_pos % lam
+    if config.dispatcher == "uniform":
+        return jax.random.randint(key, (), 0, lam)
+    # heterogeneous: fixed per-client speeds drawn once from the config seed —
+    # faster clients are picked proportionally more often (so slow clients
+    # accumulate more staleness, the paper's "heterogeneous cluster" regime).
+    speed_key = jax.random.PRNGKey(config.seed ^ 0x5EED)
+    logits = config.het_skew * jax.random.normal(speed_key, (lam,))
+    return jax.random.categorical(key, logits)
+
+
+def build_step_fn(
+    config: SimConfig,
+    loss_fn: Callable,          # loss_fn(params, xb, yb) -> scalar
+    data_x,
+    data_y,
+):
+    """Returns step(state, key) -> (state, metrics) for lax.scan."""
+    grad_fn = jax.value_and_grad(loss_fn)
+    bw = config.bandwidth
+    scfg = config.server
+
+    def step(state: SimState, key):
+        k_disp, k_batch, k_push, k_fetch = jax.random.split(key, 4)
+        c = _dispatch(config, state, k_disp)
+
+        # --- client computes a stochastic gradient on its (stale) params ---
+        idx = jax.random.randint(k_batch, (config.batch_size,), 0, data_x.shape[0])
+        xb, yb = data_x[idx], data_y[idx]
+        p_c = _tree_index(state.client_params, c)
+        loss, g = grad_fn(p_c, xb, yb)
+
+        # --- push gate (B-FASGD eq. 9) ---
+        vb = server_rules.vbar(state.server)
+        push = jax.random.uniform(k_push) < transmit_prob(vb, bw.c_push, bw.eps)
+
+        if bw.per_tensor_fetch:
+            # per-tensor timestamps → per-leaf staleness in the update rule
+            leaf_ts = state.client_leaf_ts[c]                   # [n_leaves]
+            treedef = jax.tree.structure(state.server.params)
+            grad_ts = jax.tree.unflatten(
+                treedef, [leaf_ts[i] for i in range(leaf_ts.shape[0])])
+        else:
+            grad_ts = state.client_ts[c]
+        if state.grad_cache is not None:
+            # paper's choice: a dropped push re-applies the client's most
+            # recent transmitted gradient from the server-side cache.
+            g_eff = _tree_where(push, g, _tree_index(state.grad_cache, c))
+            new_server, aux = server_rules.apply_update(scfg, state.server, g_eff, grad_ts)
+            grad_cache = jax.tree.map(
+                lambda cache, gv: cache.at[c].set(jnp.where(push, gv, cache[c])),
+                state.grad_cache,
+                g,
+            )
+        else:
+            cand_server, aux = server_rules.apply_update(scfg, state.server, g, grad_ts)
+            new_server = _tree_where(push, cand_server, state.server)
+            grad_cache = None
+
+        # --- fetch gate ---
+        if bw.per_tensor_fetch:
+            # paper §5 extension: each tensor synchronizes independently,
+            # gated by its own gradient-std statistics.
+            mask, sent, total = per_tensor_fetch_mask(
+                k_fetch, new_server.v, bw.c_fetch, bw.eps)
+            new_p_c = jax.tree.map(
+                lambda m, sp, cp: jnp.where(m, sp, cp),
+                mask, new_server.params, p_c)
+            fetch = jnp.stack(jax.tree.leaves(mask)).all()
+            leaf_mask = jnp.stack(jax.tree.leaves(mask))        # [n_leaves]
+            new_leaf_ts = jnp.where(
+                leaf_mask, new_server.timestamp, state.client_leaf_ts[c])
+            client_leaf_ts = state.client_leaf_ts.at[c].set(new_leaf_ts)
+        else:
+            fetch = jax.random.uniform(k_fetch) < transmit_prob(
+                server_rules.vbar(new_server), bw.c_fetch, bw.eps
+            )
+            sent = total = None
+            client_leaf_ts = state.client_leaf_ts
+            new_p_c = _tree_where(fetch, new_server.params, p_c)
+        client_params = _tree_set(state.client_params, c, new_p_c)
+        client_ts = state.client_ts.at[c].set(
+            jnp.where(fetch, new_server.timestamp, state.client_ts[c])
+        )
+
+        if scfg.rule == "ssgd":
+            # when a sync round completes, *every* client receives the new
+            # parameters (the paper's `unblock`).
+            applied = aux["applied"]
+            client_params = jax.tree.map(
+                lambda all_p, sp: jnp.where(applied, jnp.broadcast_to(sp, all_p.shape), all_p),
+                client_params,
+                new_server.params,
+            )
+            client_ts = jnp.where(applied, new_server.timestamp, client_ts)
+
+        one = jnp.ones((), jnp.int32)
+        counters = Counters(
+            push_potential=state.counters.push_potential + one,
+            push_actual=state.counters.push_actual + push.astype(jnp.int32),
+            fetch_potential=state.counters.fetch_potential + one,
+            fetch_actual=state.counters.fetch_actual + fetch.astype(jnp.int32),
+            fetch_bytes_sent=state.counters.fetch_bytes_sent
+            + (sent if sent is not None else jnp.zeros((), jnp.float32)),
+            fetch_bytes_total=state.counters.fetch_bytes_total
+            + (jnp.float32(total) if total is not None else jnp.zeros((), jnp.float32)),
+        )
+
+        new_state = SimState(
+            server=new_server,
+            client_params=client_params,
+            client_ts=client_ts,
+            grad_cache=grad_cache,
+            rr_pos=state.rr_pos + 1,
+            counters=counters,
+            client_leaf_ts=client_leaf_ts,
+        )
+        metrics = {
+            "loss": loss,
+            "tau": aux["tau"],
+            "client": c,
+            "pushed": push,
+            "fetched": fetch,
+        }
+        return new_state, metrics
+
+    return step
+
+
+def run_simulation(
+    config: SimConfig,
+    loss_fn: Callable,
+    init_params,
+    data_x,
+    data_y,
+    num_steps: int,
+    eval_every: int = 500,
+    eval_fn: Optional[Callable] = None,   # eval_fn(server_params) -> scalar cost
+    collect_step_metrics: bool = False,
+):
+    """Run the deterministic simulation; returns a results dict.
+
+    The scan is chunked at `eval_every` so validation cost is measured on the
+    *server* parameters periodically, exactly like the paper's figures.
+    """
+    state = init_sim(config, init_params)
+    step = build_step_fn(config, loss_fn, data_x, data_y)
+
+    @jax.jit
+    def run_chunk(state, chunk_id):
+        base = jax.random.PRNGKey(config.seed)
+        keys = jax.vmap(
+            lambda i: jax.random.fold_in(base, i)
+        )(chunk_id * eval_every + jnp.arange(eval_every))
+        return jax.lax.scan(step, state, keys)
+
+    eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
+
+    curve_steps, curve_cost, train_losses, taus = [], [], [], []
+    n_chunks = max(1, num_steps // eval_every)
+    for chunk in range(n_chunks):
+        state, metrics = run_chunk(state, chunk)
+        if collect_step_metrics:
+            train_losses.append(metrics["loss"])
+            taus.append(metrics["tau"])
+        if eval_jit is not None:
+            curve_steps.append((chunk + 1) * eval_every)
+            curve_cost.append(float(eval_jit(state.server.params)))
+
+    out = {
+        "state": state,
+        "steps": curve_steps,
+        "val_cost": curve_cost,
+        "counters": jax.tree.map(float, state.counters._asdict()),
+        "final_timestamp": int(state.server.timestamp),
+    }
+    if collect_step_metrics:
+        out["train_loss"] = jnp.concatenate(train_losses)
+        out["tau"] = jnp.concatenate(taus)
+    return out

@@ -1,0 +1,10 @@
+from repro.utils.trees import (
+    tree_zeros_like,
+    tree_ones_like,
+    tree_scale,
+    tree_add,
+    tree_sub,
+    tree_global_mean,
+    tree_size,
+    tree_bytes,
+)

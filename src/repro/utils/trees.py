@@ -1,0 +1,41 @@
+"""Small pytree helpers used throughout the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_ones_like(tree):
+    return jax.tree.map(jnp.ones_like, tree)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_global_mean(tree):
+    """Mean over *all* scalar elements of a pytree (a single scalar)."""
+    leaves = jax.tree.leaves(tree)
+    total = sum(jnp.sum(l.astype(jnp.float32)) for l in leaves)
+    count = sum(l.size for l in leaves)
+    return total / jnp.asarray(count, jnp.float32)
+
+
+def tree_size(tree) -> int:
+    return sum(l.size for l in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))

@@ -1,0 +1,29 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# CPU tests run in float32; keep x64 off (production dtype discipline).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def mlp_setup():
+    """The paper's model: 784-200-10 MLP + synthetic MNIST."""
+    from repro.models.mlp import init_mlp, nll_loss
+    from repro.data.mnist import make_synth_mnist
+
+    params = init_mlp(jax.random.PRNGKey(0))
+    ds = make_synth_mnist(n_train=512, n_valid=256)
+    return params, ds, nll_loss
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))
+
+
+def tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(x, y) for x, y in zip(la, lb))

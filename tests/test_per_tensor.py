@@ -1,0 +1,91 @@
+"""Per-tensor B-FASGD (the paper's §5 future-work proposal, implemented):
+per-tensor fetch gating + per-leaf step-staleness in the update rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rules
+from repro.core.bandwidth import BandwidthConfig, per_tensor_fetch_mask
+from repro.core.rules import ServerConfig
+from repro.sim.fred import SimConfig, init_sim, run_simulation
+
+from conftest import tree_allclose
+
+
+def test_per_tensor_mask_direction():
+    """A high-variance tensor must transmit with higher probability."""
+    v = {"hot": jnp.full((4,), 10.0), "cold": jnp.full((4,), 1e-4)}
+    hot = cold = 0
+    for i in range(200):
+        mask, sent, total = per_tensor_fetch_mask(jax.random.PRNGKey(i), v, 0.05)
+        hot += bool(mask["hot"])
+        cold += bool(mask["cold"])
+    assert hot > 190           # p ≈ 1/(1+0.005) ≈ 1
+    assert cold < 10           # p ≈ 1/(1+500) ≈ 0
+
+
+def test_per_tensor_byte_accounting():
+    v = {"a": jnp.zeros((10,), jnp.float32), "b": jnp.zeros((30,), jnp.float32)}
+    mask, sent, total = per_tensor_fetch_mask(jax.random.PRNGKey(0), v, 0.0)
+    assert total == 160.0                       # (10+30)·4 bytes
+    assert float(sent) == 160.0                 # c=0 → always transmit
+
+
+def test_per_leaf_tau_in_update_rule():
+    """apply_update with a per-leaf timestamp pytree: the fresher tensor gets
+    the larger effective update (FASGD divides by its smaller τ)."""
+    cfg = ServerConfig(rule="fasgd", lr=0.1, track_stats=True)
+    params = {"fresh": jnp.zeros((4,)), "stale": jnp.zeros((4,))}
+    st = rules.init(cfg, params)._replace(timestamp=jnp.int32(10))
+    g = {"fresh": jnp.ones((4,)), "stale": jnp.ones((4,))}
+    ts = {"fresh": jnp.int32(9), "stale": jnp.int32(0)}      # τ = 1 vs 10
+    new, aux = rules.apply_update(cfg, st, g, ts)
+    move_fresh = -float(new.params["fresh"][0])
+    move_stale = -float(new.params["stale"][0])
+    assert move_fresh > move_stale * 5           # τ ratio 10 dominates
+    assert 1.0 < float(aux["tau"]) < 10.0        # mean of per-leaf taus
+
+
+def test_per_leaf_tau_matches_scalar_when_uniform():
+    cfg = ServerConfig(rule="fasgd", lr=0.05)
+    params = {"w": jnp.ones((3,)), "b": jnp.zeros((2,))}
+    g = {"w": jnp.full((3,), 0.2), "b": jnp.full((2,), -0.1)}
+    st = rules.init(cfg, params)._replace(timestamp=jnp.int32(7))
+    s1, _ = rules.apply_update(cfg, st, g, jnp.int32(3))
+    ts_tree = {"w": jnp.int32(3), "b": jnp.int32(3)}
+    s2, _ = rules.apply_update(cfg, st, g, ts_tree)
+    assert tree_allclose(s1.params, s2.params)
+
+
+def test_sim_per_tensor_mode_runs_and_tracks_leaf_ts(mlp_setup):
+    params, ds, loss = mlp_setup
+    cfg = SimConfig(
+        num_clients=4, batch_size=8, seed=3,
+        server=ServerConfig(rule="fasgd", lr=0.005),
+        bandwidth=BandwidthConfig(c_fetch=0.05, per_tensor_fetch=True))
+    out = run_simulation(cfg, loss, params, ds.x_train, ds.y_train, 128,
+                         eval_every=128,
+                         eval_fn=lambda p: loss(p, ds.x_valid, ds.y_valid))
+    c = out["counters"]
+    assert c["fetch_bytes_total"] > 0
+    assert 0 < c["fetch_bytes_sent"] < c["fetch_bytes_total"]
+    leaf_ts = np.asarray(out["state"].client_leaf_ts)
+    assert leaf_ts.shape == (4, len(jax.tree.leaves(params)))
+    # tensors of one client desynchronize (that's the point)
+    assert (leaf_ts.max(axis=1) != leaf_ts.min(axis=1)).any()
+    assert np.isfinite(out["val_cost"][-1])
+
+
+def test_per_tensor_mode_deterministic(mlp_setup):
+    params, ds, loss = mlp_setup
+    cfg = SimConfig(
+        num_clients=4, batch_size=8, seed=5,
+        server=ServerConfig(rule="fasgd", lr=0.005),
+        bandwidth=BandwidthConfig(c_fetch=0.05, per_tensor_fetch=True))
+    runs = [run_simulation(cfg, loss, params, ds.x_train, ds.y_train, 64,
+                           eval_every=64,
+                           eval_fn=lambda p: loss(p, ds.x_valid, ds.y_valid))
+            for _ in range(2)]
+    assert runs[0]["val_cost"] == runs[1]["val_cost"]
+    assert runs[0]["counters"] == runs[1]["counters"]

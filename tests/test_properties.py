@@ -1,0 +1,140 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import rules
+from repro.core.bandwidth import transmit_prob
+from repro.core.rules import ServerConfig
+from repro.core.staleness import step_staleness
+from repro.kernels.ref import fasgd_update_ref
+
+F32 = hnp.arrays(np.float32, st.tuples(st.integers(1, 8), st.integers(1, 8)),
+                 elements=st.floats(-10, 10, width=32))
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(vbar=st.floats(0, 1e6), c=st.floats(0, 1e6))
+def test_transmit_prob_in_unit_interval(vbar, c):
+    p = float(transmit_prob(jnp.float32(vbar), c))
+    assert 0.0 <= p <= 1.0
+
+
+@given(vbar=st.floats(1e-6, 1e3), c=st.floats(1e-6, 1e3),
+       dv=st.floats(1e-6, 1e3), dc=st.floats(1e-6, 1e3))
+def test_transmit_prob_monotone(vbar, c, dv, dc):
+    """Increasing v̄ raises the probability; increasing c lowers it —
+    the B-FASGD gate direction (paper §2.3)."""
+    p0 = float(transmit_prob(jnp.float32(vbar), c))
+    assert float(transmit_prob(jnp.float32(vbar + dv), c)) >= p0 - 1e-7
+    assert float(transmit_prob(jnp.float32(vbar), c + dc)) <= p0 + 1e-7
+
+
+@given(c=st.floats(0, 0))
+def test_c_zero_always_transmits(c):
+    assert float(transmit_prob(jnp.float32(0.0), c)) == 1.0
+
+
+@given(i=st.integers(0, 10_000), j=st.integers(0, 10_000))
+def test_step_staleness_at_least_one(i, j):
+    tau = float(step_staleness(jnp.int32(max(i, j)), jnp.int32(min(i, j))))
+    assert tau >= 1.0
+    if i - j > 1 or j - i > 1:
+        assert tau == float(max(abs(i - j), 1))
+
+
+@given(g=F32, tau=st.floats(1, 100), lr=st.floats(1e-5, 1))
+def test_fasgd_ref_invariants(g, tau, lr):
+    """v stays strictly positive; the parameter move is finite and opposite
+    in sign to the gradient (elementwise), like plain SGD."""
+    p = np.zeros_like(g)
+    n = np.abs(g) * 0.01
+    b = np.zeros_like(g)
+    v = np.ones_like(g)
+    p2, n2, b2, v2 = fasgd_update_ref(
+        jnp.asarray(p), jnp.asarray(g), jnp.asarray(n), jnp.asarray(b),
+        jnp.asarray(v), lr, tau)
+    assert np.isfinite(np.asarray(p2)).all()
+    assert (np.asarray(v2) > 0).all()
+    assert (np.asarray(n2) >= 0).all()
+    move = np.asarray(p2) - p
+    # opposite sign to the gradient — or exactly zero when scale·g
+    # underflows (hypothesis finds subnormal gradients).
+    ok = (np.sign(move) == -np.sign(g)) | (move == 0)
+    assert ok[g != 0].all()
+
+
+@given(g=F32, tau1=st.floats(1, 50))
+def test_sasgd_update_shrinks_with_staleness(g, tau1):
+    """SASGD: larger τ ⇒ strictly smaller update magnitude (eq. 1-2)."""
+    cfg = ServerConfig(rule="sasgd", lr=0.1, track_stats=False)
+    params = {"w": jnp.zeros_like(jnp.asarray(g))}
+    st_ = rules.init(cfg, params)
+    tau2 = tau1 * 2.0
+    s1 = rules.effective_scale(cfg, st_, jnp.float32(tau1))
+    s2 = rules.effective_scale(cfg, st_, jnp.float32(tau2))
+    assert (np.asarray(s2["w"]) <= np.asarray(s1["w"]) + 1e-9).all()
+
+
+@given(g=F32)
+def test_stats_update_is_contraction_toward_gradient(g):
+    """n and b move toward g² and g respectively (MA property)."""
+    cfg = ServerConfig(rule="fasgd", gamma=0.9, beta=0.9)
+    params = {"w": jnp.zeros_like(jnp.asarray(g))}
+    st_ = rules.init(cfg, params)
+    new = rules.update_stats(cfg, st_, {"w": jnp.asarray(g)})
+    n1 = np.asarray(new.n["w"])
+    assert ((n1 - 0) * (g * g - n1) >= -1e-6).all()     # between old and target
+
+
+@given(data=st.data())
+def test_kernel_matches_ref_random_shapes(data):
+    """fasgd kernel (interpret) == ref on random row counts/dtypes."""
+    from repro.kernels.fasgd_update import fasgd_update_2d, LANES
+    rows = data.draw(st.sampled_from([256, 512]))
+    dtype = data.draw(st.sampled_from([np.float32, jnp.bfloat16]))
+    seed = data.draw(st.integers(0, 2**30))
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 5)
+    p = jax.random.normal(ks[0], (rows, LANES)).astype(dtype)
+    g = jax.random.normal(ks[1], (rows, LANES)).astype(dtype)
+    n = jnp.abs(jax.random.normal(ks[2], (rows, LANES))) * 0.01
+    b = jax.random.normal(ks[3], (rows, LANES)) * 0.01
+    v = 1.0 + 0.1 * jax.random.normal(ks[4], (rows, LANES))
+    po, no, bo, vo = fasgd_update_2d(p, g, n, b, v, 0.01, 2.0, interpret=True)
+    pr, nr, br, vr = fasgd_update_ref(p, g, n, b, v, 0.01, 2.0)
+    np.testing.assert_allclose(np.asarray(vo), np.asarray(vr), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(po, np.float32),
+                               np.asarray(pr, np.float32), rtol=2e-2, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**30), lam=st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_round_trainer_timestamp_equals_total_pushes(seed, lam):
+    from repro.configs.base import TrainerConfig
+    from repro.core.round_trainer import build_round_step, init_round_state
+    from repro.models.mlp import init_mlp, nll_loss
+
+    params = init_mlp(jax.random.PRNGKey(0), (8, 4))
+    tc = TrainerConfig(num_round_clients=lam, rule="fasgd", lr=0.01,
+                       c_push=1.0, c_fetch=1.0)
+    st_ = init_round_state(tc, params)
+
+    def grad_fn(p, batch):
+        x, y = batch
+        l, g = jax.value_and_grad(nll_loss)(p, x, y)
+        return l, g
+
+    step = jax.jit(build_round_step(tc, grad_fn))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (lam, 4, 8))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (lam, 4), 0, 4)
+    total = 0
+    for i in range(4):
+        st_, m = step(st_, (x, y), jax.random.fold_in(jax.random.PRNGKey(seed), i))
+        total += int(m["pushes"])
+    assert int(st_.server.timestamp) == total

@@ -1,0 +1,141 @@
+"""Round-based FASGD trainer tests (DESIGN.md §2 distributed mapping)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainerConfig
+from repro.core import rules as server_rules
+from repro.core.round_trainer import (
+    build_round_step, init_round_state, server_config,
+)
+from repro.models.mlp import init_mlp, nll_loss
+
+from conftest import tree_allclose, tree_equal
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_mlp(jax.random.PRNGKey(0), (16, 8, 4))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+    y = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0, 4)
+
+    def grad_fn(p, batch):
+        xb, yb = batch
+        l, g = jax.value_and_grad(nll_loss)(p, xb, yb)
+        return l, g
+
+    return params, (x, y), grad_fn
+
+
+def test_serial_matches_lock_protocol(setup):
+    """apply_mode='serial' with all pushes == applying the C gradients
+    one-at-a-time through core.rules.apply_update in client order."""
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="fasgd", lr=0.02)
+    st = init_round_state(tc, params)
+    step = build_round_step(tc, grad_fn, apply_mode="serial")
+    new, m = step(st, batch, jax.random.PRNGKey(0))
+
+    scfg = server_config(tc)
+    server = server_rules.init(scfg, params)
+    for c in range(4):
+        _, g = grad_fn(params, jax.tree.map(lambda l: l[c], batch))
+        server, _ = server_rules.apply_update(scfg, server, g, jnp.int32(0))
+    assert tree_allclose(new.server.params, server.params)
+    assert int(new.server.timestamp) == 4
+
+
+def test_all_fetch_means_no_divergence(setup):
+    """c_push = c_fetch = 0 → every client copy equals the server copy."""
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="fasgd", lr=0.02)
+    st = init_round_state(tc, params)
+    step = jax.jit(build_round_step(tc, grad_fn))
+    for i in range(3):
+        st, _ = step(st, batch, jax.random.PRNGKey(i))
+    for c in range(4):
+        cp = jax.tree.map(lambda l: l[c], st.client_params)
+        assert tree_allclose(cp, st.server.params)
+    assert (np.asarray(st.client_ts) == int(st.server.timestamp)).all()
+
+
+def test_fetch_gating_creates_real_staleness(setup):
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="fasgd", lr=0.02, c_fetch=50.0)
+    st = init_round_state(tc, params)
+    step = jax.jit(build_round_step(tc, grad_fn))
+    for i in range(5):
+        st, m = step(st, batch, jax.random.PRNGKey(i))
+    # with a harsh fetch gate some client must lag the server timestamp
+    assert np.asarray(st.client_ts).min() < int(st.server.timestamp)
+    assert float(m["mean_tau"]) > 1.0
+
+
+def test_local_apply_on_dropped_push(setup):
+    """drop_policy='local_apply': a client whose push AND fetch were dropped
+    still moves its own copy by −lr·g (local SGD)."""
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=2, rule="fasgd", lr=0.02,
+                       c_push=1e9, c_fetch=1e9, drop_policy="local_apply")
+    st = init_round_state(tc, params)
+    step = build_round_step(tc, grad_fn)
+    b2 = jax.tree.map(lambda l: l[:2], batch)
+    new, m = step(st, b2, jax.random.PRNGKey(0))
+    assert int(m["pushes"]) == 0 and int(m["fetches"]) == 0
+    # server untouched; clients moved locally
+    assert tree_equal(new.server.params, st.server.params)
+    _, g0 = grad_fn(params, jax.tree.map(lambda l: l[0], b2))
+    expect = jax.tree.map(lambda p, g: p - 0.02 * g, params, g0)
+    got = jax.tree.map(lambda l: l[0], new.client_params)
+    assert tree_allclose(got, expect)
+
+
+def test_fused_equals_serial_for_one_client(setup):
+    """With C=1 the fused masked-sum *is* the serial protocol: one stats
+    update on the (single) gradient, one modulated apply."""
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=1, rule="fasgd", lr=0.02)
+    b1 = jax.tree.map(lambda l: l[:1], batch)
+    s1 = init_round_state(tc, params)
+    s2 = init_round_state(tc, params)
+    serial = jax.jit(build_round_step(tc, grad_fn, apply_mode="serial"))
+    fused = jax.jit(build_round_step(tc, grad_fn, apply_mode="fused"))
+    for i in range(5):
+        s1, m1 = serial(s1, b1, jax.random.PRNGKey(i))
+        s2, m2 = fused(s2, b1, jax.random.PRNGKey(i))
+    assert tree_allclose(s1.server.params, s2.server.params, rtol=1e-4)
+    assert int(s2.server.timestamp) == int(s1.server.timestamp)
+
+
+def test_fused_mode_converges_like_serial(setup):
+    """C>1: the schedules differ (sequential stats vs one mean-grad step) —
+    both must still advance T identically and reduce the loss."""
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="fasgd", lr=0.02)
+    s1 = init_round_state(tc, params)
+    s2 = init_round_state(tc, params)
+    serial = jax.jit(build_round_step(tc, grad_fn, apply_mode="serial"))
+    fused = jax.jit(build_round_step(tc, grad_fn, apply_mode="fused"))
+    first = None
+    for i in range(10):
+        s1, m1 = serial(s1, batch, jax.random.PRNGKey(i))
+        s2, m2 = fused(s2, batch, jax.random.PRNGKey(i))
+        if first is None:
+            first = (float(m1["loss"]), float(m2["loss"]))
+    assert int(s2.server.timestamp) == int(s1.server.timestamp)
+    assert float(m1["loss"]) < first[0]
+    assert float(m2["loss"]) < first[1]
+
+
+def test_round_trainer_decreases_loss(setup):
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="fasgd", lr=0.05)
+    st = init_round_state(tc, params)
+    step = jax.jit(build_round_step(tc, grad_fn))
+    first = None
+    for i in range(40):
+        st, m = step(st, batch, jax.random.PRNGKey(i))
+        if first is None:
+            first = float(m["loss"])
+    assert float(m["loss"]) < first

@@ -1,0 +1,148 @@
+"""Unit tests for the server update rules (paper §2, eqs. 1-8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rules
+from repro.core.rules import ServerConfig
+
+from conftest import tree_allclose
+
+
+def _params():
+    return {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]]), "b": jnp.array([0.1, -0.1])}
+
+
+def _grad(seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": scale * jax.random.normal(k, (2, 2)),
+        "b": scale * jax.random.normal(jax.random.fold_in(k, 1), (2,)),
+    }
+
+
+def test_asgd_is_plain_sgd():
+    cfg = ServerConfig(rule="asgd", lr=0.1, track_stats=False)
+    st = rules.init(cfg, _params())
+    g = _grad()
+    new, aux = rules.apply_update(cfg, st, g, jnp.int32(0))
+    expect = jax.tree.map(lambda p, gg: p - 0.1 * gg, _params(), g)
+    assert tree_allclose(new.params, expect)
+    assert int(new.timestamp) == 1
+
+
+def test_sasgd_divides_by_staleness():
+    cfg = ServerConfig(rule="sasgd", lr=0.1)
+    st = rules.init(cfg, _params())
+    st = st._replace(timestamp=jnp.int32(5))
+    g = _grad()
+    new, aux = rules.apply_update(cfg, st, g, jnp.int32(1))   # tau = 4
+    assert float(aux["tau"]) == 4.0
+    expect = jax.tree.map(lambda p, gg: p - (0.1 / 4.0) * gg, _params(), g)
+    assert tree_allclose(new.params, expect)
+
+
+def test_staleness_clipped_to_one():
+    """A fresh gradient (i == j) must not divide by zero (τ→1 convention)."""
+    cfg = ServerConfig(rule="sasgd", lr=0.1)
+    st = rules.init(cfg, _params())
+    new, aux = rules.apply_update(cfg, st, _grad(), jnp.int32(0))
+    assert float(aux["tau"]) == 1.0
+
+
+def test_exp_penalty_decays():
+    cfg = ServerConfig(rule="exp", lr=0.1, kappa=0.5)
+    st = rules.init(cfg, _params())._replace(timestamp=jnp.int32(10))
+    scale = rules.effective_scale(cfg, st, jnp.float32(3.0))
+    np.testing.assert_allclose(
+        float(jax.tree.leaves(scale)[0].ravel()[0]), 0.1 * np.exp(-0.5 * 2.0),
+        rtol=1e-6)
+
+
+def test_fasgd_stats_update_matches_equations():
+    """Eqs. 4-6 (intent variant), one step from zero stats."""
+    cfg = ServerConfig(rule="fasgd", gamma=0.9, beta=0.8, eps=1e-8)
+    st = rules.init(cfg, _params())
+    g = _grad()
+    new = rules.update_stats(cfg, st, g)
+    for leaf_n, leaf_g in zip(jax.tree.leaves(new.n), jax.tree.leaves(g)):
+        np.testing.assert_allclose(np.asarray(leaf_n),
+                                   0.1 * np.asarray(leaf_g) ** 2, rtol=1e-5)
+    for leaf_b, leaf_g in zip(jax.tree.leaves(new.b), jax.tree.leaves(g)):
+        np.testing.assert_allclose(np.asarray(leaf_b),
+                                   0.1 * np.asarray(leaf_g), rtol=1e-5)
+    # v: beta * 1 + (1-beta) * std   (v initialized at ones)
+    for leaf_v, leaf_n, leaf_b in zip(jax.tree.leaves(new.v),
+                                      jax.tree.leaves(new.n),
+                                      jax.tree.leaves(new.b)):
+        std = np.sqrt(np.maximum(np.asarray(leaf_n) - np.asarray(leaf_b) ** 2, 0)
+                      + cfg.eps)
+        np.testing.assert_allclose(np.asarray(leaf_v), 0.8 + 0.2 * std, rtol=1e-5)
+
+
+def test_fasgd_literal_variant_uses_inverse_std():
+    ci = ServerConfig(rule="fasgd", variant="intent")
+    cl = ServerConfig(rule="fasgd", variant="literal")
+    g = _grad(scale=5.0)
+    ni = rules.update_stats(ci, rules.init(ci, _params()), g)
+    nl = rules.update_stats(cl, rules.init(cl, _params()), g)
+    # large gradients → std > 1 → intent v > literal v
+    vi = np.asarray(jax.tree.leaves(ni.v)[0])
+    vl = np.asarray(jax.tree.leaves(nl.v)[0])
+    assert (vi >= vl).all()
+
+
+def test_fasgd_update_rule_eq7():
+    """θ_{i+1} = θ_i − α/(v τ) g, elementwise in v."""
+    cfg = ServerConfig(rule="fasgd", lr=0.05)
+    st = rules.init(cfg, _params())._replace(timestamp=jnp.int32(3))
+    g = _grad()
+    new, aux = rules.apply_update(cfg, st, g, jnp.int32(1))    # tau=2
+    # recompute by hand
+    st2 = rules.update_stats(cfg, st, g)
+    for p_new, p_old, v, gg in zip(jax.tree.leaves(new.params),
+                                   jax.tree.leaves(st.params),
+                                   jax.tree.leaves(st2.v),
+                                   jax.tree.leaves(g)):
+        expect = np.asarray(p_old) - 0.05 / (np.asarray(v) * 2.0 + cfg.eps) * np.asarray(gg)
+        np.testing.assert_allclose(np.asarray(p_new), expect, rtol=1e-5)
+    assert int(new.timestamp) == 4
+
+
+def test_ssgd_waits_for_all_clients():
+    cfg = ServerConfig(rule="ssgd", lr=0.1, num_clients=3)
+    st = rules.init(cfg, _params())
+    g = _grad()
+    for i in range(2):
+        st, aux = rules.apply_update(cfg, st, g, jnp.int32(0))
+        assert not bool(aux["applied"])
+        assert tree_allclose(st.params, _params())
+    st, aux = rules.apply_update(cfg, st, g, jnp.int32(0))
+    assert bool(aux["applied"])
+    # mean of 3 identical grads = g
+    expect = jax.tree.map(lambda p, gg: p - 0.1 * gg, _params(), g)
+    assert tree_allclose(st.params, expect)
+    assert int(st.timestamp) == 1
+
+
+def test_fasgd_keeps_lr_high_when_gradients_consistent():
+    """Consistent small-variance gradients → std ≈ 0 → v sinks below 1 →
+    FASGD's effective lr *exceeds* SASGD's α/τ (paper §2.2: 'keep the
+    learning rate high when B-Staleness is less than step-staleness')."""
+    cfg = ServerConfig(rule="fasgd", lr=0.1, gamma=0.5, beta=0.5)
+    st = rules.init(cfg, _params())
+    g = _grad()
+    for _ in range(30):
+        st, _ = rules.apply_update(cfg, st, g, st.timestamp)   # same grad always
+    scale = rules.effective_scale(cfg, st, jnp.float32(4.0))
+    sasgd_scale = 0.1 / 4.0
+    assert float(jax.tree.leaves(scale)[0].mean()) > sasgd_scale
+
+
+def test_bf16_params_stay_bf16():
+    cfg = ServerConfig(rule="fasgd", lr=0.1)
+    p = jax.tree.map(lambda l: l.astype(jnp.bfloat16), _params())
+    st = rules.init(cfg, p)
+    new, _ = rules.apply_update(cfg, st, _grad(), jnp.int32(0))
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(new.params))

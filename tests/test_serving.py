@@ -1,0 +1,120 @@
+"""Prefill/decode consistency: the compiled decode path must reproduce the
+full-sequence forward logits (teacher forcing), per architecture family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.api import make_batch
+from repro.models.serving import decode_step, init_cache, prefill
+from repro.models.transformer import forward, init_model
+
+B, S = 2, 32
+
+DECODER_ARCHS = ["tinyllama-1.1b", "llama3-8b", "grok-1-314b",
+                 "deepseek-v2-236b", "mamba2-1.3b", "zamba2-7b",
+                 "phi-3-vision-4.2b"]
+
+
+def _pad_cache(cfg, pre_cache, B, total):
+    """Grow a prefill cache (seq dim = S) to `total` slots."""
+    full = init_cache(cfg, B, total)
+
+    def place(dst, src):
+        if dst.shape == src.shape:
+            return src
+        if dst.ndim == src.ndim and dst.shape[2] > src.shape[2]:
+            return jax.lax.dynamic_update_slice(
+                dst, src, (0,) * src.ndim)
+        return src
+
+    if cfg.arch_type == "ssm":
+        return pre_cache
+    if cfg.arch_type == "hybrid":
+        return {"mamba": pre_cache["mamba"],
+                "attn": jax.tree.map(place, full["attn"], pre_cache["attn"])}
+    return jax.tree.map(place, full, pre_cache)
+
+
+@pytest.mark.parametrize("name", DECODER_ARCHS)
+def test_decode_matches_forward(name):
+    cfg = get_smoke_config(name)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, B, S, jax.random.PRNGKey(1))
+    batch.pop("targets", None)
+
+    # full forward over all S positions (the oracle)
+    logits_full, _ = forward(params, cfg, batch)
+
+    # prefill on the first S-4 tokens, then decode the last 4 one by one
+    S0 = S - 4
+    if cfg.arch_type == "vlm":
+        P = cfg.num_image_tokens
+        pre = {"tokens": batch["tokens"][:, : S0 - P],
+               "image_embeds": batch["image_embeds"]}
+        toks = batch["tokens"]
+        tok_idx = lambda t: t - P            # token index into text stream
+    else:
+        pre = {"tokens": batch["tokens"][:, :S0]}
+        toks = batch["tokens"]
+        tok_idx = lambda t: t
+
+    logits_pre, cache = prefill(params, cfg, pre)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre, np.float32),
+        np.asarray(logits_full[:, :S0], np.float32), rtol=2e-3, atol=2e-3)
+
+    cache = _pad_cache(cfg, cache, B, S)
+    for t in range(S0, S):
+        tok = toks[:, tok_idx(t): tok_idx(t) + 1]
+        logits_t, cache = decode_step(params, cfg, tok, cache, jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits_t[:, 0], np.float32),
+            np.asarray(logits_full[:, t], np.float32), rtol=5e-3, atol=5e-3)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Windowed decode with a ring buffer == full decode restricted to the
+    window (tinyllama variant with attn_window)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"),
+                              attn_window=16)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, 1, 48, jax.random.PRNGKey(1))
+    batch.pop("targets")
+    logits_full, _ = forward(params, cfg, batch)   # windowed full forward
+
+    S0 = 40
+    pre = {"tokens": batch["tokens"][:, :S0]}
+    _, cache = prefill(params, cfg, pre)
+    # ring cache: last `window` keys of the prefill
+    ring = init_cache(cfg, 1, 48)                  # W == window slots
+    W = cfg.attn_window
+    for leaf_name in ("k", "v"):
+        src = cache[leaf_name][:, :, S0 - W: S0]   # [L, B, W, kv, hd]
+        # ring slot i holds position p with p % W == i
+        order = np.argsort([(S0 - W + i) % W for i in range(W)])
+        ring[leaf_name] = src[:, :, order]
+    c = ring
+    for t in range(S0, 44):
+        tok = batch["tokens"][:, t: t + 1]
+        logits_t, c = decode_step(params, cfg, tok, c, jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits_t[:, 0], np.float32),
+            np.asarray(logits_full[:, t], np.float32), rtol=5e-3, atol=5e-3)
+
+
+def test_encoder_has_no_decode():
+    cfg = get_smoke_config("hubert-xlarge")
+    assert not cfg.supports_decode()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(AssertionError):
+        prefill(params, cfg, {"frames": jnp.zeros((1, 8, cfg.frame_embed_dim))})
+
+
+def test_cache_shapes_bounded_by_window():
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config("llama3-8b"), attn_window=8)
+    cache = init_cache(cfg, 2, 1024)
+    assert cache["k"].shape[2] == 8               # O(window), not O(seq)
