@@ -9,7 +9,7 @@ import jax
 import numpy as np
 
 from repro.core.bandwidth import BandwidthConfig
-from repro.core.rules import ServerConfig
+from repro.core.rules import ServerConfig, get_rule
 from repro.data.mnist import load_mnist
 from repro.models.mlp import init_mlp, nll_loss
 from repro.sim.fred import SimConfig, run_simulation
@@ -22,8 +22,14 @@ def mnist_experiment(
     c_push: float = 0.0, c_fetch: float = 0.0, variant: str = "intent",
     seed: int = 0, eval_every: int = 0, drop_policy: str = "cache",
     dispatcher: str = "uniform", per_tensor_fetch: bool = False,
+    rule_kwargs: dict | None = None,
 ):
-    """One FRED run of the paper's 784-200-10 MLP task → results dict."""
+    """One FRED run of the paper's 784-200-10 MLP task → results dict.
+
+    `rule_kwargs` forwards rule-specific ServerConfig fields (kappa,
+    poly_power, ...).  Synchronous rules get `num_clients=lam` so a round
+    really barriers on all λ clients.
+    """
     eval_every = eval_every or max(steps // 20, 1)
     params = init_mlp(jax.random.PRNGKey(seed))
     ds = load_mnist(seed=seed)
@@ -31,7 +37,10 @@ def mnist_experiment(
         num_clients=lam,
         batch_size=mu,
         dispatcher=dispatcher,
-        server=ServerConfig(rule=rule, lr=lr, variant=variant),
+        server=ServerConfig(
+            rule=rule, lr=lr, variant=variant,
+            num_clients=lam if get_rule(rule).synchronous else 1,
+            **(rule_kwargs or {})),
         bandwidth=BandwidthConfig(c_push=c_push, c_fetch=c_fetch,
                                   drop_policy=drop_policy,
                                   per_tensor_fetch=per_tensor_fetch),
@@ -62,7 +71,22 @@ LR_POOLS = {
     "fasgd": (0.001, 0.0025, 0.005, 0.01),
     "sasgd": (0.02, 0.04, 0.08, 0.16),
     "asgd": (0.0025, 0.005, 0.01, 0.02),
+    "exp": (0.0025, 0.005, 0.01, 0.02),
+    "ssgd": (0.05, 0.1, 0.2, 0.4),
+    # gap falls back to full lr when copies stay close -> asgd-like pool;
+    # poly (tau^0.5) sits between asgd and sasgd.
+    "gap": (0.0025, 0.005, 0.01, 0.02),
+    "poly": (0.01, 0.02, 0.04, 0.08),
 }
+
+
+def lr_pool(rule: str):
+    return LR_POOLS.get(rule, LR_POOLS["asgd"])
+
+
+def dispatcher_for(rule: str) -> str:
+    """Synchronous (barrier) rules need the fair round-robin schedule."""
+    return "roundrobin" if get_rule(rule).synchronous else "uniform"
 
 
 def tune_lr(rule: str, lam: int, mu: int, steps: int, seed: int = 0):

@@ -13,7 +13,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.configs.base import TrainerConfig

@@ -2,8 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
-
 import jax.numpy as jnp
 
 
@@ -121,11 +119,13 @@ INPUT_SHAPES = {
 class TrainerConfig:
     """Round-based FASGD trainer (DESIGN.md §2)."""
     num_round_clients: int = 4   # C divergent parameter copies
-    rule: str = "fasgd"
+    rule: str = "fasgd"          # any name in core.rules.registered_rules()
     lr: float = 0.005
     gamma: float = 0.9
     beta: float = 0.9
     eps: float = 1e-8
+    kappa: float = 0.15          # 'exp' penalty strength
+    poly_power: float = 0.5      # 'poly' exponent p in lr / tau**p
     variant: str = "intent"
     c_push: float = 0.0
     c_fetch: float = 0.0

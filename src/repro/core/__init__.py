@@ -1,6 +1,7 @@
 """FASGD core: the paper's contribution as composable JAX modules.
 
-- `rules`     — ASGD / SASGD / FASGD / exp-penalty / sync server update rules
+- `rules`     — pluggable update-rule registry (asgd / sasgd / fasgd / exp /
+                poly / gap / ssgd; add your own with `@register_rule`)
 - `staleness` — step-staleness and the exact B-Staleness oracle
 - `bandwidth` — B-FASGD probabilistic push/fetch gating
 - `round_trainer` — SPMD round-based FASGD for pod-scale training
@@ -8,11 +9,15 @@
 from repro.core.rules import (
     ServerConfig,
     ServerState,
+    UpdateRule,
     init,
     apply_update,
     vbar,
     update_stats,
     effective_scale,
+    register_rule,
+    get_rule,
+    registered_rules,
 )
 from repro.core.bandwidth import BandwidthConfig, transmit_prob, should_transmit
 from repro.core.staleness import step_staleness, b_staleness

@@ -34,8 +34,7 @@ Dropped pushes follow ``drop_policy``:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +55,7 @@ class RoundState(NamedTuple):
 def server_config(tc: TrainerConfig) -> ServerConfig:
     return ServerConfig(
         rule=tc.rule, lr=tc.lr, gamma=tc.gamma, beta=tc.beta, eps=tc.eps,
+        kappa=tc.kappa, poly_power=tc.poly_power,
         variant=tc.variant, num_clients=tc.num_round_clients,
     )
 
@@ -78,28 +78,37 @@ def init_round_state(tc: TrainerConfig, params) -> RoundState:
     )
 
 
-def _serial_apply(scfg: ServerConfig, server: ServerState, grads, push, client_ts):
+def _serial_apply(scfg: ServerConfig, server: ServerState, grads, push,
+                  client_ts, client_params):
     """Apply pushed gradients one at a time (paper's lock order = client order)."""
 
     def body(sv, inp):
-        g_c, push_c, ts_c = inp
-        cand, aux = server_rules.apply_update(scfg, sv, g_c, ts_c)
+        g_c, push_c, ts_c, cp_c = inp
+        cand, aux = server_rules.apply_update(scfg, sv, g_c, ts_c,
+                                              client_params=cp_c)
         new = jax.tree.map(
             lambda a, b: jnp.where(push_c, a, b), cand, sv
         )
         return new, aux["tau"]
 
-    server, taus = jax.lax.scan(body, server, (grads, push, client_ts))
+    server, taus = jax.lax.scan(
+        body, server, (grads, push, client_ts, client_params))
     return server, taus
 
 
-def _fused_apply(scfg: ServerConfig, server: ServerState, grads, push, client_ts):
+def _fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
+                 client_ts, client_params):
     """One masked-sum application of all pushed gradients (beyond-paper).
 
-    Stats (n, b, v) advance once with the mean pushed gradient; the weight
-    delta is Σ_c m_c·scale(v, τ_c)·g_c computed against the *post-stats* v,
-    and T advances by the number of pushes.
+    Stats (n, b, v, extra) advance once with the mean pushed gradient; the
+    weight delta is Σ_c m_c·scale(v, τ_c)·g_c computed against the
+    *post-stats* statistics via the registered rule's `scale_leaf`, and T
+    advances by the number of pushes.
     """
+    rule = server_rules.get_rule(scfg.rule)
+    if not rule.supports_fused:
+        raise ValueError(
+            f"rule {scfg.rule!r} does not support the fused apply mode")
     n_push = jnp.sum(push.astype(jnp.int32))
     pushf = push.astype(jnp.float32)
     mean_g = jax.tree.map(
@@ -107,27 +116,38 @@ def _fused_apply(scfg: ServerConfig, server: ServerState, grads, push, client_ts
         grads,
     )
     has_push = n_push > 0
-    stats_state = server_rules.update_stats(scfg, server, mean_g)
+    stats_state = rule.update_stats(scfg, server, mean_g)
     server = jax.tree.map(
         lambda a, b: jnp.where(has_push, a, b), stats_state, server
     )
 
     taus = server_rules.step_staleness(server.timestamp, client_ts)  # [C]
 
-    def leaf_delta(v_leaf, g_leaf):
-        # scale_c = lr / (v*tau_c + eps) for fasgd; rules handled via scale fn
-        if scfg.rule == "fasgd":
-            scale = scfg.lr / (v_leaf[None] * taus.reshape((-1,) + (1,) * v_leaf.ndim) + scfg.eps)
-        elif scfg.rule == "sasgd":
-            scale = (scfg.lr / taus).reshape((-1,) + (1,) * v_leaf.ndim)
-        elif scfg.rule == "asgd":
-            scale = jnp.full((taus.shape[0],) + (1,) * v_leaf.ndim, scfg.lr)
-        else:
-            raise ValueError(f"fused mode supports asgd/sasgd/fasgd, not {scfg.rule}")
-        m = pushf.reshape((-1,) + (1,) * v_leaf.ndim)
-        return jnp.sum(m * scale * g_leaf, axis=0)
+    gap = None
+    if rule.needs_client_params:
+        # per-client parameter-space divergence θ_T − θ_ts, leaves [C, ...]
+        gap = jax.tree.map(
+            lambda sp, cp: sp[None].astype(jnp.float32)
+            - cp.astype(jnp.float32),
+            server.params, client_params)
 
-    delta = jax.tree.map(leaf_delta, server.v, grads)
+    treedef = jax.tree.structure(server.v)
+    v_leaves = jax.tree.leaves(server.v)
+    g_leaves = jax.tree.leaves(grads)
+    gap_leaves = (jax.tree.leaves(gap) if gap is not None
+                  else [None] * len(v_leaves))
+    e_leaves = server_rules.extra_leaf_dicts(server.extra, server.v)
+
+    deltas = []
+    for v_leaf, g_leaf, e_leaf, gap_leaf in zip(
+            v_leaves, g_leaves, e_leaves, gap_leaves):
+        expand = (-1,) + (1,) * v_leaf.ndim
+        scale = rule.scale_leaf(
+            scfg, v_leaf[None], taus.reshape(expand),
+            extra=e_leaf, gap=gap_leaf)
+        m = pushf.reshape(expand)
+        deltas.append(jnp.sum(m * scale * g_leaf, axis=0))
+    delta = jax.tree.unflatten(treedef, deltas)
     new_params = jax.tree.map(jnp.subtract, server.params, delta)
     server = server._replace(
         params=new_params, timestamp=server.timestamp + n_push
@@ -160,9 +180,13 @@ def build_round_step(
         )
 
         if apply_mode == "serial":
-            server, taus = _serial_apply(scfg, state.server, grads, push, state.client_ts)
+            server, taus = _serial_apply(
+                scfg, state.server, grads, push, state.client_ts,
+                state.client_params)
         else:
-            server, taus = _fused_apply(scfg, state.server, grads, push, state.client_ts)
+            server, taus = _fused_apply(
+                scfg, state.server, grads, push, state.client_ts,
+                state.client_params)
 
         fetch = (
             jax.random.uniform(k_fetch, (C,)) < transmit_prob(

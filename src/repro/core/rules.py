@@ -1,5 +1,30 @@
-"""Server update rules: ASGD, SASGD, FASGD (paper §2), exponential penalty,
-and synchronous SGD.
+"""Server update rules as a pluggable registry: ASGD, SASGD, FASGD (paper
+§2), exponential penalty, synchronous SGD, Gap-Aware, and polynomial decay.
+
+Every rule is an `UpdateRule` subclass registered by name::
+
+    @register_rule("myrule")
+    class MyRule(UpdateRule):
+        def scale_leaf(self, config, v, tau, extra=None, gap=None):
+            return config.lr / (1.0 + jnp.asarray(tau, jnp.float32)) * jnp.ones_like(v)
+
+That one definition is consumed everywhere a rule can run: the serial
+`apply_update` path, `round_trainer`'s fused masked-sum path, and the FRED
+simulator — adding a rule is a one-file change.  A rule declares
+
+* ``init_extra_state(config, params)`` — rule-private state stored in
+  ``ServerState.extra`` (e.g. Gap-Aware's step-size EMA, sync SGD's pending
+  gradient buffer);
+* ``update_stats(config, state, grad)`` — one statistics step (defaults to
+  the shared FASGD moving averages, eqs. 4–6; override to extend ``extra``);
+* ``scale_leaf(config, v, tau, extra, gap)`` — the per-leaf effective
+  learning rate, written in broadcastable jnp ops so the same body serves a
+  single gradient (``v: [*s]``, scalar ``tau``) and the fused per-client
+  batch (``v: [1, *s]``, ``tau: [C, 1, ...]``, ``gap: [C, *s]``);
+* class attributes: ``synchronous`` (round-barrier apply), ``requires_stats``
+  (consumes n/b/v), ``needs_client_params`` (scale uses the parameter-space
+  gap θ_T − θ_ts), ``supports_fused`` (usable in the masked-sum path), and
+  ``pallas_op`` (name of a fused Pallas fast path in `kernels.ops`).
 
 All rules are pure functions over a `ServerState` pytree so they can live
 inside `jax.lax.scan` / `jax.jit` / `shard_map`.  The FASGD moving-average
@@ -16,14 +41,42 @@ B-FASGD gate direction.  `variant="intent"` (default) averages the std itself;
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.staleness import step_staleness
 
-Rule = str  # 'asgd' | 'sasgd' | 'fasgd' | 'exp' | 'ssgd'
+Rule = str  # a registry key — see registered_rules()
+
+_REGISTRY: Dict[str, "UpdateRule"] = {}
+
+
+def register_rule(name: str):
+    """Class decorator: instantiate `cls` and register it under `name`."""
+
+    def deco(cls):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate update-rule name {name!r}")
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+
+    return deco
+
+
+def get_rule(name: str) -> "UpdateRule":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown update rule {name!r}; registered: {registered_rules()}"
+        ) from None
+
+
+def registered_rules() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,56 +88,53 @@ class ServerConfig:
     eps: float = 1e-8
     variant: str = "intent"     # 'intent' | 'literal'  (DESIGN.md §1.1)
     kappa: float = 0.15         # exp-penalty strength: lr * exp(-kappa * tau)
+    poly_power: float = 0.5     # 'poly' exponent p in lr / tau**p (Zhang et al.)
     track_stats: bool = True    # maintain n/b/v even for non-FASGD rules
     num_clients: int = 1        # ssgd needs to know when a round is complete
-    use_fused_kernel: bool = False  # route the FASGD update through Pallas
+    use_fused_kernel: bool = False  # route updates through a rule's Pallas op
 
     def __post_init__(self):
-        assert self.rule in ("asgd", "sasgd", "fasgd", "exp", "ssgd"), self.rule
+        get_rule(self.rule)     # raises KeyError for unregistered names
         assert self.variant in ("intent", "literal"), self.variant
 
 
 class ServerState(NamedTuple):
     """Canonical parameters + timestamp + FASGD statistics.
 
-    `n`, `b`, `v` mirror the params pytree (zeros/ones-init); `pending` and
-    `pending_count` exist only for the synchronous rule (zeros otherwise —
-    scan requires fixed structure, and the sim keeps all fields live).
+    `n`, `b`, `v` mirror the params pytree (zeros/ones-init); `extra` holds
+    rule-private state from `UpdateRule.init_extra_state` (None for rules
+    that need none — scan requires fixed structure, and the sim keeps all
+    fields live).
     """
     params: Any
     timestamp: jnp.ndarray          # int32 scalar, "T" in the paper
     n: Any                          # MA of g^2        (eq. 4)
     b: Any                          # MA of g          (eq. 5)
     v: Any                          # MA of std        (eq. 6; see variant)
-    pending: Optional[Any] = None   # ssgd: sum of gradients this round
-    pending_count: Optional[jnp.ndarray] = None
+    extra: Any = None               # rule-specific (gap: ĝ EMA; ssgd: pending)
 
 
 def init(config: ServerConfig, params) -> ServerState:
+    rule = get_rule(config.rule)
     zeros = jax.tree.map(jnp.zeros_like, params)
     # v starts at 1 so that the first few FASGD updates are ~plain ASGD
     # instead of dividing by ~0.
     ones = jax.tree.map(jnp.ones_like, params)
-    st = ServerState(
+    return ServerState(
         params=params,
         timestamp=jnp.zeros((), jnp.int32),
         n=zeros,
         b=zeros,
         v=ones,
+        extra=rule.init_extra_state(config, params),
     )
-    if config.rule == "ssgd":
-        st = st._replace(
-            pending=jax.tree.map(jnp.zeros_like, params),
-            pending_count=jnp.zeros((), jnp.int32),
-        )
-    return st
 
 
 def _std(config: ServerConfig, n_leaf, b_leaf):
     return jnp.sqrt(jnp.maximum(n_leaf - b_leaf**2, 0.0) + config.eps)
 
 
-def update_stats(config: ServerConfig, state: ServerState, grad) -> ServerState:
+def _shared_stats(config: ServerConfig, state: ServerState, grad) -> ServerState:
     """Eqs. 4–6: one moving-average step with gradient `grad`."""
     g, be = config.gamma, config.beta
     n = jax.tree.map(lambda m, x: g * m + (1 - g) * x * x, state.n, grad)
@@ -100,6 +150,12 @@ def update_stats(config: ServerConfig, state: ServerState, grad) -> ServerState:
     return state._replace(n=n, b=b, v=v)
 
 
+def update_stats(config: ServerConfig, state: ServerState, grad) -> ServerState:
+    """One statistics step under the configured rule (eqs. 4–6 plus any
+    rule-private `extra` statistics)."""
+    return get_rule(config.rule).update_stats(config, state, grad)
+
+
 def _tau_tree(state: ServerState, tau):
     """Broadcast a scalar staleness to a per-leaf pytree.  `tau` may already
     be a pytree (per-tensor staleness — the paper's §5 extension, where each
@@ -109,72 +165,168 @@ def _tau_tree(state: ServerState, tau):
     return jax.tree.map(lambda _: tau, state.v)
 
 
-def effective_scale(config: ServerConfig, state: ServerState, tau):
-    """Per-parameter learning-rate pytree for one gradient with staleness
-    tau (scalar or per-leaf pytree)."""
-    taus = _tau_tree(state, tau)
-    if config.rule == "asgd":
-        return jax.tree.map(lambda v: jnp.full_like(v, config.lr), state.v)
-    if config.rule == "sasgd":
-        return jax.tree.map(
-            lambda v, t: jnp.full_like(v, config.lr) / t, state.v, taus)
-    if config.rule == "exp":
-        return jax.tree.map(
-            lambda v, t: jnp.full_like(v, config.lr)
-            * jnp.exp(-config.kappa * (t - 1.0)), state.v, taus)
-    if config.rule == "fasgd":
-        # eq. (7): alpha / (v * tau), elementwise in v.
-        return jax.tree.map(
-            lambda v, t: config.lr / (v * t + config.eps), state.v, taus
-        )
-    raise ValueError(config.rule)
+def extra_leaf_dicts(extra, like):
+    """Slice `ServerState.extra` into per-leaf dicts for `scale_leaf`.
 
-
-def apply_update(config: ServerConfig, state: ServerState, grad, grad_timestamp):
-    """One server update (paper's Async SGD protocol step 2 + FASGD eqs. 4-8).
-
-    Returns (new_state, aux) where aux carries the staleness and the mean
-    effective lr for diagnostics.  For `rule='ssgd'` the gradient is
-    accumulated and parameters only move once `num_clients` gradients arrived.
+    Only entries whose tree structure mirrors `like` (the params/v tree) are
+    passed through, leaf-aligned; anything else (scalars, buffers) is
+    rule-private apply state.
     """
-    if jax.tree.structure(grad_timestamp) == jax.tree.structure(state.params):
-        # per-tensor timestamps (§5 extension)
-        tau = jax.tree.map(
-            lambda ts: step_staleness(state.timestamp, ts), grad_timestamp)
-        tau_scalar = sum(jnp.mean(t) for t in jax.tree.leaves(tau)) / max(
-            len(jax.tree.leaves(tau)), 1)
-    else:
-        tau = tau_scalar = step_staleness(state.timestamp, grad_timestamp)
+    n_leaves = len(jax.tree.leaves(like))
+    if not isinstance(extra, dict):
+        return [None] * n_leaves
+    like_def = jax.tree.structure(like)
+    mirrored = {
+        k: jax.tree.leaves(sub)
+        for k, sub in extra.items()
+        if jax.tree.structure(sub) == like_def
+    }
+    if not mirrored:
+        return [None] * n_leaves
+    return [{k: leaves[i] for k, leaves in mirrored.items()}
+            for i in range(n_leaves)]
 
-    if config.rule == "ssgd":
-        pending = jax.tree.map(jnp.add, state.pending, grad)
-        count = state.pending_count + 1
-        full = count >= config.num_clients
 
-        def do_apply(_):
-            new_params = jax.tree.map(
-                lambda p, s: p - config.lr * s / config.num_clients,
-                state.params,
-                pending,
-            )
-            return new_params, jax.tree.map(jnp.zeros_like, pending), jnp.zeros((), jnp.int32), state.timestamp + 1
+def effective_scale(config: ServerConfig, state: ServerState, tau, gap=None):
+    """Per-parameter learning-rate pytree for one gradient with staleness
+    tau (scalar or per-leaf pytree).  `gap` optionally carries θ_T − θ_ts
+    per leaf for gap-aware rules."""
+    rule = get_rule(config.rule)
+    taus = _tau_tree(state, tau)
+    treedef = jax.tree.structure(state.v)
+    v_leaves = jax.tree.leaves(state.v)
+    t_leaves = jax.tree.leaves(taus)
+    gap_leaves = (jax.tree.leaves(gap) if gap is not None
+                  else [None] * len(v_leaves))
+    e_leaves = extra_leaf_dicts(state.extra, state.v)
+    scales = [
+        rule.scale_leaf(config, v, t, extra=e, gap=g)
+        for v, t, e, g in zip(v_leaves, t_leaves, e_leaves, gap_leaves)
+    ]
+    return jax.tree.unflatten(treedef, scales)
 
-        def no_apply(_):
-            return state.params, pending, count, state.timestamp
 
-        params, pending, count, ts = jax.lax.cond(full, do_apply, no_apply, None)
-        new_state = state._replace(
-            params=params, pending=pending, pending_count=count, timestamp=ts
+def _mean_scale(scale) -> jnp.ndarray:
+    # NB: the count is a python float — >2B-param models overflow an i32
+    # literal if it is staged as an int.
+    return sum(jnp.sum(s) for s in jax.tree.leaves(scale)) / float(
+        sum(s.size for s in jax.tree.leaves(scale)))
+
+
+def _gap_tree(state: ServerState, client_params):
+    """Parameter-space divergence θ_T − θ_ts of the pushing client."""
+    return jax.tree.map(
+        lambda sp, cp: sp.astype(jnp.float32) - cp.astype(jnp.float32),
+        state.params, client_params)
+
+
+class UpdateRule:
+    """Base class for server update rules; subclass + `@register_rule`."""
+
+    name: str = "?"
+    synchronous: bool = False        # apply() buffers until a round completes
+    needs_client_params: bool = False  # scale uses the gap θ_T − θ_ts
+    requires_stats: bool = False     # rule consumes n/b/v (or extra stats)
+    supports_fused: bool = True      # usable in round_trainer's fused path
+    pallas_op: Optional[str] = None  # kernels.ops fast path, if any
+
+    def init_extra_state(self, config: ServerConfig, params):
+        return None
+
+    def update_stats(self, config: ServerConfig, state: ServerState, grad):
+        return _shared_stats(config, state, grad)
+
+    def scale_leaf(self, config: ServerConfig, v, tau, extra=None, gap=None):
+        """Per-leaf effective lr; must broadcast `v` against `tau`/`gap`."""
+        raise NotImplementedError(self.name)
+
+    def _apply_pallas(self, config, state, grad, tau, tau_scalar):
+        raise NotImplementedError(self.name)
+
+    def apply(self, config: ServerConfig, state: ServerState, grad, tau,
+              tau_scalar, client_params=None):
+        """One server update: stats step, scale, SGD step, T ← T + 1."""
+        per_tensor_tau = (
+            jax.tree.structure(tau) == jax.tree.structure(state.params))
+        if (config.use_fused_kernel and self.pallas_op is not None
+                and not per_tensor_tau):
+            return self._apply_pallas(config, state, grad, tau, tau_scalar)
+        if config.track_stats or self.requires_stats:
+            state = self.update_stats(config, state, grad)
+        gap = (_gap_tree(state, client_params)
+               if self.needs_client_params and client_params is not None
+               else None)
+        scale = effective_scale(config, state, tau, gap=gap)
+        new_params = jax.tree.map(
+            lambda p, s, g: (p.astype(jnp.float32)
+                             - s * g.astype(jnp.float32)).astype(p.dtype),
+            state.params, scale, grad,
         )
-        if config.track_stats:
-            new_state = update_stats(config, new_state, grad)
-        return new_state, {"tau": tau_scalar, "applied": full}
+        new_state = state._replace(
+            params=new_params, timestamp=state.timestamp + 1)
+        return new_state, {"tau": tau_scalar, "mean_scale": _mean_scale(scale)}
 
-    if config.use_fused_kernel and config.rule == "fasgd" \
-            and jax.tree.structure(tau) != jax.tree.structure(state.params):
+
+def _bshape(v, tau):
+    return jnp.broadcast_shapes(jnp.shape(v), jnp.shape(jnp.asarray(tau)))
+
+
+@register_rule("asgd")
+class AsgdRule(UpdateRule):
+    """Plain async SGD: θ ← θ − α·g, staleness ignored (eq. 1)."""
+
+    def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        return jnp.full(_bshape(v, tau), config.lr, jnp.float32)
+
+
+@register_rule("sasgd")
+class SasgdRule(UpdateRule):
+    """Staleness-aware SGD (Zhang et al.): α/τ (eq. 2)."""
+
+    def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        t = jnp.asarray(tau, jnp.float32)
+        return jnp.broadcast_to(config.lr / t, _bshape(v, tau))
+
+
+@register_rule("exp")
+class ExpPenaltyRule(UpdateRule):
+    """Exponential staleness penalty (Chan & Lane): α·e^{−κ(τ−1)}."""
+
+    def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        t = jnp.asarray(tau, jnp.float32)
+        return jnp.broadcast_to(
+            config.lr * jnp.exp(-config.kappa * (t - 1.0)), _bshape(v, tau))
+
+
+@register_rule("poly")
+class PolyRule(UpdateRule):
+    """Polynomial staleness decay: α/τ^p (Zhang et al., arXiv:1511.05950).
+
+    `p = config.poly_power`; p = 1 recovers SASGD, p < 1 penalizes stale
+    gradients more gently (the regime Zhang et al. found stable for large
+    staleness), p > 1 more harshly.
+    """
+
+    def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        t = jnp.asarray(tau, jnp.float32)
+        return jnp.broadcast_to(
+            config.lr / t ** config.poly_power, _bshape(v, tau))
+
+
+@register_rule("fasgd")
+class FasgdRule(UpdateRule):
+    """FASGD (the paper): α / (v·τ), elementwise in the std MA v (eq. 7)."""
+
+    requires_stats = True
+    pallas_op = "fasgd_update"
+
+    def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        return config.lr / (v * jnp.asarray(tau, jnp.float32) + config.eps)
+
+    def _apply_pallas(self, config, state, grad, tau, tau_scalar):
         # Pallas fast path: eqs. 4-8 fused into one HBM pass per leaf
         # (kernels/fasgd_update; interpret-mode on CPU).  Semantically equal
-        # to the unfused path below — tests/test_kernels_fasgd.py.
+        # to the unfused path — tests/test_kernels_fasgd.py.
         from repro.kernels.ops import fasgd_update
         n32 = jax.tree.map(lambda l: l.astype(jnp.float32), state.n)
         b32 = jax.tree.map(lambda l: l.astype(jnp.float32), state.b)
@@ -188,33 +340,117 @@ def apply_update(config: ServerConfig, state: ServerState, grad, grad_timestamp)
         new_state = state._replace(
             params=new_params, n=cast(n_new, state.n), b=cast(b_new, state.b),
             v=cast(v_new, state.v), timestamp=state.timestamp + 1)
-        scale = effective_scale(
-            config, new_state._replace(v=v_new), tau)
-        aux = {
-            "tau": tau_scalar,
-            "mean_scale": sum(jnp.sum(s) for s in jax.tree.leaves(scale))
-            / float(sum(s.size for s in jax.tree.leaves(scale))),
-        }
-        return new_state, aux
+        scale = effective_scale(config, new_state._replace(v=v_new), tau)
+        return new_state, {"tau": tau_scalar, "mean_scale": _mean_scale(scale)}
 
-    if config.track_stats or config.rule == "fasgd":
-        state = update_stats(config, state, grad)
 
-    scale = effective_scale(config, state, tau)
-    new_params = jax.tree.map(
-        lambda p, s, g: (p.astype(jnp.float32)
-                         - s * g.astype(jnp.float32)).astype(p.dtype),
-        state.params, scale, grad,
-    )
-    new_state = state._replace(params=new_params, timestamp=state.timestamp + 1)
-    aux = {
-        "tau": tau_scalar,
-        # NB: the count is a python float — >2B-param models overflow an i32
-        # literal if it is staged as an int.
-        "mean_scale": sum(jnp.sum(s) for s in jax.tree.leaves(scale))
-        / float(sum(s.size for s in jax.tree.leaves(scale))),
-    }
-    return new_state, aux
+@register_rule("gap")
+class GapAwareRule(UpdateRule):
+    """Gap-Aware staleness mitigation (Barkai et al., arXiv:1909.10802).
+
+    Penalizes a stale gradient by the *parameter-space* gap it was computed
+    across rather than its step count: C = max(1, |θ_T − θ_ts| / ĝ)
+    elementwise, where ĝ is an EMA of the typical per-step parameter
+    movement α·|g|; the effective lr is α / C.  A client whose copy barely
+    diverged pays no penalty even at large τ — the same insight as FASGD's
+    B-Staleness, realized through the parameter gap instead of gradient std.
+
+    When no client copy is available to measure against (`gap=None`, e.g. a
+    bare `apply_update` without `client_params`) the penalty is 1 (ASGD).
+    """
+
+    needs_client_params = True
+    requires_stats = True
+
+    def init_extra_state(self, config, params):
+        return {"gbar": jax.tree.map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), params)}
+
+    def update_stats(self, config, state, grad):
+        state = _shared_stats(config, state, grad)
+        gbar = jax.tree.map(
+            lambda m, g: (config.gamma * m
+                          + (1 - config.gamma)
+                          * config.lr * jnp.abs(g.astype(jnp.float32))),
+            state.extra["gbar"], grad)
+        return state._replace(extra={"gbar": gbar})
+
+    def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        shape = _bshape(v, tau)
+        if gap is None or extra is None:
+            return jnp.full(shape, config.lr, jnp.float32)
+        penalty = jnp.maximum(
+            1.0, jnp.abs(gap) / (extra["gbar"] + config.eps))
+        return jnp.broadcast_to(
+            config.lr / penalty, jnp.broadcast_shapes(shape, penalty.shape))
+
+
+@register_rule("ssgd")
+class SsgdRule(UpdateRule):
+    """Synchronous SGD barrier: buffer gradients, step once per full round."""
+
+    synchronous = True
+    supports_fused = False
+
+    def init_extra_state(self, config, params):
+        return {"pending": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        return jnp.full(
+            _bshape(v, tau), config.lr / max(config.num_clients, 1),
+            jnp.float32)
+
+    def apply(self, config, state, grad, tau, tau_scalar, client_params=None):
+        pending = jax.tree.map(jnp.add, state.extra["pending"], grad)
+        count = state.extra["count"] + 1
+        full = count >= config.num_clients
+
+        def do_apply(_):
+            new_params = jax.tree.map(
+                lambda p, s: p - config.lr * s / config.num_clients,
+                state.params,
+                pending,
+            )
+            return (new_params, jax.tree.map(jnp.zeros_like, pending),
+                    jnp.zeros((), jnp.int32), state.timestamp + 1)
+
+        def no_apply(_):
+            return state.params, pending, count, state.timestamp
+
+        params, pending, count, ts = jax.lax.cond(full, do_apply, no_apply, None)
+        new_state = state._replace(
+            params=params, timestamp=ts,
+            extra={"pending": pending, "count": count},
+        )
+        if config.track_stats:
+            new_state = self.update_stats(config, new_state, grad)
+        return new_state, {"tau": tau_scalar, "applied": full}
+
+
+def apply_update(config: ServerConfig, state: ServerState, grad,
+                 grad_timestamp, *, client_params=None):
+    """One server update (paper's Async SGD protocol step 2 + FASGD eqs. 4-8).
+
+    Returns (new_state, aux) where aux carries the staleness and the mean
+    effective lr for diagnostics.  `grad_timestamp` may be a scalar or a
+    per-tensor pytree (§5 extension).  `client_params` optionally carries the
+    parameter copy the gradient was computed on — rules with
+    `needs_client_params` (gap-aware) use it to measure the divergence.
+    For synchronous rules the gradient is accumulated and parameters only
+    move once `num_clients` gradients arrived.
+    """
+    rule = get_rule(config.rule)
+    if jax.tree.structure(grad_timestamp) == jax.tree.structure(state.params):
+        # per-tensor timestamps (§5 extension)
+        tau = jax.tree.map(
+            lambda ts: step_staleness(state.timestamp, ts), grad_timestamp)
+        tau_scalar = sum(jnp.mean(t) for t in jax.tree.leaves(tau)) / max(
+            len(jax.tree.leaves(tau)), 1)
+    else:
+        tau = tau_scalar = step_staleness(state.timestamp, grad_timestamp)
+    return rule.apply(config, state, grad, tau, tau_scalar,
+                      client_params=client_params)
 
 
 def vbar(state: ServerState) -> jnp.ndarray:

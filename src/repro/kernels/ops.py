@@ -6,7 +6,6 @@ auto-detect.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -14,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import fasgd_update as _fk
 from repro.kernels import flash_attention as _fa
-from repro.kernels.ref import fasgd_update_ref, attention_ref
+from repro.kernels.ref import attention_ref
 
 LANES = _fk.LANES
 

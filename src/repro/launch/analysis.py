@@ -12,7 +12,6 @@ collective-permute op.  Shapes are parsed from the HLO type annotations.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, Optional, Tuple
 

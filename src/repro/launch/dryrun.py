@@ -23,7 +23,6 @@ Usage:
 Results append to benchmarks/results/dryrun.jsonl (one JSON object per line).
 """
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys

@@ -4,14 +4,29 @@ devices *before* any jax init; tests must keep seeing 1 device)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit sharding mode needs the axis type spelled out
+    from jax.sharding import AxisType
+except ImportError:  # jax <= 0.4.x: no AxisType; every axis is implicitly Auto
+    AxisType = None
+
+
+def make_mesh_compat(shape, axes):
+    """`jax.make_mesh` with Auto axis types on every jax that runs here.
+
+    Older jax (< 0.5) has neither `AxisType` nor the `axis_types` kwarg and
+    treats all axes as Auto already, so the kwarg is simply dropped.
+    """
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -19,8 +34,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, max(n // data, 1))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 # Hardware constants for the roofline analysis (TPU v5e, per chip).

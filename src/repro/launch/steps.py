@@ -17,8 +17,7 @@ This is the bridge between the model zoo and the launcher/dry-run:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +62,7 @@ def _zeros_of(abstract_tree):
 def server_config(tc: TrainerConfig) -> ServerConfig:
     return ServerConfig(
         rule=tc.rule, lr=tc.lr, gamma=tc.gamma, beta=tc.beta, eps=tc.eps,
+        kappa=tc.kappa, poly_power=tc.poly_power,
         variant=tc.variant, num_clients=tc.num_round_clients,
     )
 

@@ -14,11 +14,9 @@ Modes:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from repro.configs import get_config, get_smoke_config
@@ -30,7 +28,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_train_step, server_config
 from repro.models.api import make_batch, param_count
 from repro.models.transformer import init_model, loss_fn
-from repro.sharding import batch_shardings, param_shardings, set_mesh_context
+from repro.sharding import set_mesh_context
 
 
 def batch_for_step(cfg, B, S, step):
@@ -51,7 +49,7 @@ def main():
     ap.add_argument("--batch", type=int, default=8, help="global batch")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--rule", default="fasgd",
-                    choices=["asgd", "sasgd", "fasgd", "exp", "ssgd"])
+                    choices=list(server_rules.registered_rules()))
     ap.add_argument("--lr", type=float, default=0.005)
     ap.add_argument("--clients", type=int, default=4,
                     help="round-trainer client groups; 0 = pod-sync step")

@@ -17,8 +17,6 @@ Conventions:
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -11,7 +11,6 @@ Cache layouts (leaves stacked over layers for lax.scan):
 """
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,7 @@ from repro.models import attention as attn
 from repro.models import ssm as ssm_mod
 from repro.models import moe as moe_mod
 from repro.models.layers import mlp_forward, rms_norm
-from repro.models.transformer import _embed_inputs, _hybrid_split, _shared_block, _scan, mask_vocab_pad
+from repro.models.transformer import _embed_inputs, _hybrid_split, _scan, mask_vocab_pad
 from repro.sharding.rules import constrain
 
 

@@ -12,7 +12,7 @@ Each optimizer is ``(init_fn, update_fn)``:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

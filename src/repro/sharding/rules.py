@@ -27,10 +27,9 @@ from __future__ import annotations
 import contextlib
 import os
 import threading
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -12,9 +12,10 @@ Semantics follow the paper's Async SGD protocol:
   heterogeneous-speed schedules);
 * the gradient is computed on the parameters that client fetched at its last
   interaction — its *stale* copy — and carries that copy's timestamp;
-* the server applies the update under the configured rule (ASGD / SASGD /
-  FASGD / exp-penalty / sync) and the client receives the new parameters —
-  unless B-FASGD gating drops the push and/or the fetch (paper §2.3).
+* the server applies the update under the configured rule (any rule in the
+  `core.rules` registry — ASGD / SASGD / FASGD / exp-penalty / poly /
+  gap-aware / sync) and the client receives the new parameters — unless
+  B-FASGD gating drops the push and/or the fetch (paper §2.3).
 
 Dropped pushes follow the paper's server-side gradient cache by default
 (`drop_policy='cache'`: re-apply that client's most recent transmitted
@@ -23,7 +24,6 @@ gradient), or `'skip'` (no server update at that opportunity).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -46,9 +46,10 @@ class SimConfig:
 
     def __post_init__(self):
         assert self.dispatcher in ("uniform", "roundrobin", "heterogeneous")
-        if self.server.rule == "ssgd":
-            # Sync SGD only makes sense with a fair schedule.
-            assert self.dispatcher == "roundrobin", "ssgd requires roundrobin"
+        if server_rules.get_rule(self.server.rule).synchronous:
+            # A synchronous barrier only makes sense with a fair schedule.
+            assert self.dispatcher == "roundrobin", \
+                f"{self.server.rule} requires roundrobin"
 
 
 class Counters(NamedTuple):
@@ -160,14 +161,16 @@ def build_step_fn(
             # paper's choice: a dropped push re-applies the client's most
             # recent transmitted gradient from the server-side cache.
             g_eff = _tree_where(push, g, _tree_index(state.grad_cache, c))
-            new_server, aux = server_rules.apply_update(scfg, state.server, g_eff, grad_ts)
+            new_server, aux = server_rules.apply_update(
+                scfg, state.server, g_eff, grad_ts, client_params=p_c)
             grad_cache = jax.tree.map(
                 lambda cache, gv: cache.at[c].set(jnp.where(push, gv, cache[c])),
                 state.grad_cache,
                 g,
             )
         else:
-            cand_server, aux = server_rules.apply_update(scfg, state.server, g, grad_ts)
+            cand_server, aux = server_rules.apply_update(
+                scfg, state.server, g, grad_ts, client_params=p_c)
             new_server = _tree_where(push, cand_server, state.server)
             grad_cache = None
 
@@ -197,7 +200,7 @@ def build_step_fn(
             jnp.where(fetch, new_server.timestamp, state.client_ts[c])
         )
 
-        if scfg.rule == "ssgd":
+        if server_rules.get_rule(scfg.rule).synchronous:
             # when a sync round completes, *every* client receives the new
             # parameters (the paper's `unblock`).
             applied = aux["applied"]

@@ -1,15 +1,13 @@
 """Launch-layer integration: train/serve steps on real (CPU) devices, and
 the dry-run plumbing on a 1×1 mesh (the 512-device path is exercised by
 `python -m repro.launch.dryrun`, which must own the XLA device-count flag)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.configs.base import INPUT_SHAPES, InputShape, TrainerConfig
+from repro.configs.base import InputShape, TrainerConfig
 from repro.core import rules as server_rules
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import (

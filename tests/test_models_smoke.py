@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
-from repro.configs.base import INPUT_SHAPES
 from repro.models.api import make_batch, param_count
 from repro.models.transformer import forward, init_model, loss_fn
 

@@ -3,12 +3,11 @@ per-tensor fetch gating + per-leaf step-staleness in the update rules."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import rules
 from repro.core.bandwidth import BandwidthConfig, per_tensor_fetch_mask
 from repro.core.rules import ServerConfig
-from repro.sim.fred import SimConfig, init_sim, run_simulation
+from repro.sim.fred import SimConfig, run_simulation
 
 from conftest import tree_allclose
 

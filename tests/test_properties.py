@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (CI extra)")
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 

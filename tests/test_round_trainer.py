@@ -91,11 +91,19 @@ def test_local_apply_on_dropped_push(setup):
     assert tree_allclose(got, expect)
 
 
-def test_fused_equals_serial_for_one_client(setup):
+FUSED_RULES = tuple(r for r in server_rules.registered_rules()
+                    if server_rules.get_rule(r).supports_fused)
+
+
+@pytest.mark.parametrize("rule", FUSED_RULES)
+def test_fused_equals_serial_for_one_client(setup, rule):
     """With C=1 the fused masked-sum *is* the serial protocol: one stats
-    update on the (single) gradient, one modulated apply."""
+    update on the (single) gradient, one modulated apply.  Must hold for
+    every fused-capable registered rule — the registry guarantees one
+    definition serves both paths.  A harsh fetch gate keeps real staleness
+    (and a real parameter gap, for the gap rule) in play."""
     params, batch, grad_fn = setup
-    tc = TrainerConfig(num_round_clients=1, rule="fasgd", lr=0.02)
+    tc = TrainerConfig(num_round_clients=1, rule=rule, lr=0.02, c_fetch=50.0)
     b1 = jax.tree.map(lambda l: l[:1], batch)
     s1 = init_round_state(tc, params)
     s2 = init_round_state(tc, params)
@@ -106,6 +114,32 @@ def test_fused_equals_serial_for_one_client(setup):
         s2, m2 = fused(s2, b1, jax.random.PRNGKey(i))
     assert tree_allclose(s1.server.params, s2.server.params, rtol=1e-4)
     assert int(s2.server.timestamp) == int(s1.server.timestamp)
+
+
+def test_sync_rule_rejects_fused_mode(setup):
+    """The barrier rule declares supports_fused=False; the fused path must
+    refuse it loudly instead of silently mis-applying."""
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="ssgd", lr=0.02)
+    st = init_round_state(tc, params)
+    step = build_round_step(tc, grad_fn, apply_mode="fused")
+    with pytest.raises(ValueError, match="fused"):
+        step(st, batch, jax.random.PRNGKey(0))
+
+
+def test_gap_rule_decreases_loss_with_divergence(setup):
+    """gap end-to-end through the round trainer with a fetch gate that lets
+    client copies actually diverge (nonzero parameter gaps)."""
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="gap", lr=0.05, c_fetch=5.0)
+    st = init_round_state(tc, params)
+    step = jax.jit(build_round_step(tc, grad_fn))
+    first = None
+    for i in range(30):
+        st, m = step(st, batch, jax.random.PRNGKey(i))
+        if first is None:
+            first = float(m["loss"])
+    assert float(m["loss"]) < first
 
 
 def test_fused_mode_converges_like_serial(setup):

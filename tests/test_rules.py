@@ -146,3 +146,112 @@ def test_bf16_params_stay_bf16():
     st = rules.init(cfg, p)
     new, _ = rules.apply_update(cfg, st, _grad(), jnp.int32(0))
     assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(new.params))
+
+
+# --- registry ---------------------------------------------------------------
+
+
+def test_registry_lists_all_builtin_rules():
+    names = rules.registered_rules()
+    for expect in ("asgd", "sasgd", "fasgd", "exp", "poly", "gap", "ssgd"):
+        assert expect in names
+    with pytest.raises(KeyError):
+        rules.get_rule("no-such-rule")
+    with pytest.raises(KeyError):
+        ServerConfig(rule="no-such-rule")
+
+
+@pytest.mark.parametrize("rule", rules.registered_rules())
+def test_every_registered_rule_applies_end_to_end(rule):
+    """apply_update under any registered rule: finite params, T advances,
+    parameters move (num_clients=1 makes even the sync barrier apply)."""
+    cfg = ServerConfig(rule=rule, lr=0.05, num_clients=1)
+    st = rules.init(cfg, _params())._replace(timestamp=jnp.int32(3))
+    g = _grad()
+    new, aux = rules.apply_update(cfg, st, g, jnp.int32(1),
+                                  client_params=_params())
+    assert int(new.timestamp) == 4
+    assert float(aux["tau"]) == 2.0
+    for leaf in jax.tree.leaves(new.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert not tree_allclose(new.params, st.params)
+
+
+@pytest.mark.parametrize("rule", rules.registered_rules())
+def test_every_rule_scale_is_positive_and_finite(rule):
+    cfg = ServerConfig(rule=rule, lr=0.1, num_clients=4)
+    st = rules.init(cfg, _params())
+    scale = rules.effective_scale(cfg, st, jnp.float32(5.0))
+    for s in jax.tree.leaves(scale):
+        assert (np.asarray(s) > 0).all()
+        assert np.isfinite(np.asarray(s)).all()
+
+
+def test_poly_rule_matches_power_law():
+    cfg = ServerConfig(rule="poly", lr=0.1, poly_power=0.5)
+    st = rules.init(cfg, _params())
+    for tau in (1.0, 4.0, 9.0):
+        scale = rules.effective_scale(cfg, st, jnp.float32(tau))
+        np.testing.assert_allclose(
+            float(jax.tree.leaves(scale)[0].ravel()[0]),
+            0.1 / tau ** 0.5, rtol=1e-6)
+
+
+def test_poly_power_one_is_sasgd():
+    cp = ServerConfig(rule="poly", lr=0.1, poly_power=1.0)
+    cs = ServerConfig(rule="sasgd", lr=0.1)
+    sp = rules.effective_scale(cp, rules.init(cp, _params()), jnp.float32(7.0))
+    ss = rules.effective_scale(cs, rules.init(cs, _params()), jnp.float32(7.0))
+    assert tree_allclose(sp, ss)
+
+
+def test_gap_rule_penalizes_divergence():
+    """Gap-Aware: a client whose copy diverged far in parameter space gets a
+    much smaller effective step than one that stayed near the server."""
+    cfg = ServerConfig(rule="gap", lr=0.1)
+    st = rules.init(cfg, _params())
+    g = _grad()
+    for _ in range(5):                      # warm the step-size EMA ĝ
+        st = rules.update_stats(cfg, st, g)
+    near = jax.tree.map(lambda p: p - 1e-9, st.params)
+    far = jax.tree.map(lambda p: p - 1.0, st.params)
+    s_near, _ = rules.apply_update(cfg, st, g, jnp.int32(0), client_params=near)
+    s_far, _ = rules.apply_update(cfg, st, g, jnp.int32(0), client_params=far)
+
+    def move(new):
+        return max(float(jnp.abs(a - b).max()) for a, b in
+                   zip(jax.tree.leaves(new.params), jax.tree.leaves(st.params)))
+
+    assert move(s_near) > 5 * move(s_far)
+
+
+def test_gap_rule_without_client_params_is_asgd():
+    """No client copy to measure the gap against → penalty 1 (plain ASGD)."""
+    cg = ServerConfig(rule="gap", lr=0.1)
+    ca = ServerConfig(rule="asgd", lr=0.1)
+    g = _grad()
+    sg, _ = rules.apply_update(cg, rules.init(cg, _params()), g, jnp.int32(0))
+    sa, _ = rules.apply_update(ca, rules.init(ca, _params()), g, jnp.int32(0))
+    assert tree_allclose(sg.params, sa.params)
+
+
+def test_register_custom_rule_one_file():
+    """The advertised extension point: a rule defined+registered locally is
+    immediately usable through apply_update."""
+
+    @rules.register_rule("_test_halflr")
+    class _HalfLr(rules.UpdateRule):
+        def scale_leaf(self, config, v, tau, extra=None, gap=None):
+            shape = jnp.broadcast_shapes(
+                jnp.shape(v), jnp.shape(jnp.asarray(tau)))
+            return jnp.full(shape, config.lr / 2, jnp.float32)
+
+    try:
+        cfg = ServerConfig(rule="_test_halflr", lr=0.2, track_stats=False)
+        st = rules.init(cfg, _params())
+        g = _grad()
+        new, _ = rules.apply_update(cfg, st, g, jnp.int32(0))
+        expect = jax.tree.map(lambda p, gg: p - 0.1 * gg, _params(), g)
+        assert tree_allclose(new.params, expect)
+    finally:
+        rules._REGISTRY.pop("_test_halflr", None)

@@ -1,6 +1,5 @@
 """FRED simulator tests (paper §3): determinism, sync-equivalence, gating."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,5 +1,4 @@
 """Substrate tests: optimizers, checkpointing, data pipelines, staleness."""
-import os
 import tempfile
 
 import jax
