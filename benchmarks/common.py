@@ -22,16 +22,20 @@ def mnist_experiment(
     c_push: float = 0.0, c_fetch: float = 0.0, variant: str = "intent",
     seed: int = 0, eval_every: int = 0, drop_policy: str = "cache",
     dispatcher: str = "uniform", per_tensor_fetch: bool = False,
+    events_per_step: int = 1, apply_mode: str = "serial",
+    sizes: tuple = (784, 200, 10),
     rule_kwargs: dict | None = None,
 ):
     """One FRED run of the paper's 784-200-10 MLP task → results dict.
 
     `rule_kwargs` forwards rule-specific ServerConfig fields (kappa,
     poly_power, ...).  Synchronous rules get `num_clients=lam` so a round
-    really barriers on all λ clients.
+    really barriers on all λ clients.  `events_per_step`/`apply_mode`
+    select the event-batched engine (`apply_mode='fused'` is the λ-scaling
+    hot path; 'serial' is bit-identical to the legacy simulator).
     """
     eval_every = eval_every or max(steps // 20, 1)
-    params = init_mlp(jax.random.PRNGKey(seed))
+    params = init_mlp(jax.random.PRNGKey(seed), sizes)
     ds = load_mnist(seed=seed)
     cfg = SimConfig(
         num_clients=lam,
@@ -45,6 +49,8 @@ def mnist_experiment(
                                   drop_policy=drop_policy,
                                   per_tensor_fetch=per_tensor_fetch),
         seed=seed,
+        events_per_step=events_per_step,
+        apply_mode=apply_mode,
     )
     t0 = time.time()
     out = run_simulation(
@@ -52,16 +58,22 @@ def mnist_experiment(
         eval_every=eval_every,
         eval_fn=lambda p: nll_loss(p, ds.x_valid, ds.y_valid),
     )
+    wall = time.time() - t0
     return {
         "rule": rule, "lam": lam, "mu": mu, "lr": lr, "steps": steps,
         "variant": variant, "c_push": c_push, "c_fetch": c_fetch,
         "seed": seed,
+        "events_per_step": events_per_step, "apply_mode": apply_mode,
         "curve_steps": out["steps"],
         "val_cost": out["val_cost"],
         "final_cost": out["val_cost"][-1] if out["val_cost"] else None,
         "best_cost": min(out["val_cost"]) if out["val_cost"] else None,
         "counters": out["counters"],
-        "wall_s": round(time.time() - t0, 2),
+        "wall_s": round(wall, 2),
+        # end-to-end rate: includes one-time jit compilation and the
+        # periodic host-synchronous eval_fn calls.  For steady-state engine
+        # throughput use benchmarks/sim_throughput.py, which excludes both.
+        "events_per_sec_e2e": round(steps / max(wall, 1e-9), 1),
     }
 
 

@@ -131,4 +131,5 @@ class TrainerConfig:
     c_fetch: float = 0.0
     drop_policy: str = "local_apply"   # 'local_apply' | 'discard'
     stats_dtype: str = "float32"       # bfloat16 for the >100B dry-runs
+    use_fused_kernel: bool = False     # batched Pallas apply (engine/fused)
     seed: int = 0

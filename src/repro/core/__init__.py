@@ -4,6 +4,9 @@
                 poly / gap / ssgd; add your own with `@register_rule`)
 - `staleness` — step-staleness and the exact B-Staleness oracle
 - `bandwidth` — B-FASGD probabilistic push/fetch gating
+- `engine`    — the shared protocol core: gates, gated/serial/fused
+                application, counters (consumed by `sim.fred` AND
+                `round_trainer` — the single source of protocol truth)
 - `round_trainer` — SPMD round-based FASGD for pod-scale training
 """
 from repro.core.rules import (
@@ -20,6 +23,15 @@ from repro.core.rules import (
     registered_rules,
 )
 from repro.core.bandwidth import BandwidthConfig, transmit_prob, should_transmit
+from repro.core.engine import (
+    Counters,
+    apply_gated,
+    count_events,
+    fused_apply,
+    init_counters,
+    serial_apply,
+    transmit_gate,
+)
 from repro.core.staleness import step_staleness, b_staleness
 from repro.core.round_trainer import (
     RoundState,

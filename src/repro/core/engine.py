@@ -1,0 +1,299 @@
+"""The shared async-SGD protocol core ("the engine").
+
+`sim/fred.py` (the paper's §3 deterministic simulator) and
+`core/round_trainer.py` (the SPMD mapping of the same protocol onto pod
+hardware) used to each re-implement the push/fetch/apply decision structure.
+This module is the single source of protocol truth both now consume:
+
+ - **gates** — the B-FASGD eq. 9 Bernoulli push/fetch draws, batched over an
+   arbitrary leading event/client axis (`transmit_gate`);
+ - **gated application** — one server update under a push decision with the
+   FRED drop policies (`apply_gated`: 'cache' re-applies the client's last
+   transmitted gradient, 'skip' masks the whole update);
+ - **serial application** — pushed gradients applied one-at-a-time in event
+   order via `lax.scan` (`serial_apply`), bit-identical to the paper's lock
+   protocol with that arrival order;
+ - **fused application** — one masked-sum update θ ← θ − Σ_c m_c·scale(v,τ_c)·g_c
+   with a single stats step on the mean pushed gradient (`fused_apply`),
+   optionally routed through the batched Pallas scale-and-accumulate kernel
+   (`kernels/batched_update.py`) for rules that declare support;
+ - **bookkeeping** — push/fetch opportunity `Counters` shared by both paths
+   (`init_counters` / `count_events`), and the deterministic last-event-wins
+   scatter used when an event batch targets duplicate clients
+   (`last_event_scatter`).
+
+Every function is pure over `ServerState`/pytrees so it can live inside
+`jax.lax.scan` / `jax.jit` / `shard_map`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rules as server_rules
+from repro.core.bandwidth import transmit_prob
+from repro.core.rules import ServerConfig, ServerState
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers shared by both consumers
+# ---------------------------------------------------------------------------
+
+def tree_index(tree, i):
+    """Gather leaf[i] (i may be an int array — gathers along the leading axis)."""
+    return jax.tree.map(lambda l: l[i], tree)
+
+
+def tree_set(tree, i, val):
+    return jax.tree.map(lambda l, v: l.at[i].set(v), tree, val)
+
+
+def tree_where(pred, a, b):
+    """Scalar-predicate select over matching pytrees."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_where_axis(pred, a, b):
+    """Per-row select: `pred` is [K] over the leading axis of every leaf."""
+    return jax.tree.map(
+        lambda x, y: jnp.where(pred.reshape((-1,) + (1,) * (x.ndim - 1)), x, y),
+        a, b)
+
+
+def tree_stack(tree, n):
+    """Replicate a pytree along a new leading axis of size n."""
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), tree)
+
+
+# ---------------------------------------------------------------------------
+# counters — opportunity / transmission bookkeeping (FRED §3, EXPERIMENTS §Perf)
+# ---------------------------------------------------------------------------
+
+class Counters(NamedTuple):
+    """Push/fetch opportunity accounting shared by FRED and the round trainer.
+
+    No jnp defaults here on purpose: NamedTuple defaults are evaluated at
+    module import, which would stage device ops before the caller configures
+    jax — use `init_counters()`.
+    """
+    push_potential: jnp.ndarray   # int32 scalar
+    push_actual: jnp.ndarray
+    fetch_potential: jnp.ndarray
+    fetch_actual: jnp.ndarray
+    # per-tensor mode: byte-resolution accounting (floats)
+    fetch_bytes_sent: jnp.ndarray
+    fetch_bytes_total: jnp.ndarray
+
+
+def init_counters() -> Counters:
+    zero = jnp.zeros((), jnp.int32)
+    zf = jnp.zeros((), jnp.float32)
+    return Counters(zero, zero, zero, zero, zf, zf)
+
+
+def count_events(counters: Counters, push, fetch,
+                 bytes_sent=None, bytes_total=None) -> Counters:
+    """Fold one batch of events in: `push`/`fetch` are bool scalars or [K]."""
+    push = jnp.atleast_1d(push)
+    fetch = jnp.atleast_1d(fetch)
+    return Counters(
+        push_potential=counters.push_potential + jnp.int32(push.size),
+        push_actual=counters.push_actual + jnp.sum(push.astype(jnp.int32)),
+        fetch_potential=counters.fetch_potential + jnp.int32(fetch.size),
+        fetch_actual=counters.fetch_actual + jnp.sum(fetch.astype(jnp.int32)),
+        fetch_bytes_sent=counters.fetch_bytes_sent
+        + (bytes_sent if bytes_sent is not None
+           else jnp.zeros((), jnp.float32)),
+        fetch_bytes_total=counters.fetch_bytes_total
+        + (jnp.float32(bytes_total) if bytes_total is not None
+           else jnp.zeros((), jnp.float32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# gates — B-FASGD eq. 9
+# ---------------------------------------------------------------------------
+
+def transmit_gate(key, server: ServerState, c, eps, shape=()):
+    """Bernoulli eq.-9 draw(s): r < 1/(1 + c/(v̄+ε)).
+
+    `c = 0` gives probability exactly 1 (uniform is in [0, 1)), so always
+    drawing keeps the RNG stream identical whether or not gating is on.
+    """
+    return jax.random.uniform(key, shape) < transmit_prob(
+        server_rules.vbar(server), c, eps)
+
+
+# ---------------------------------------------------------------------------
+# gated application — one event
+# ---------------------------------------------------------------------------
+
+def apply_gated(scfg: ServerConfig, server: ServerState, grad, push, grad_ts,
+                *, client_params=None, cached_grad=None):
+    """One server application under a push decision.
+
+    cached_grad is not None  → the paper's 'cache' drop policy: a dropped
+      push re-applies that client's most recent transmitted gradient, so the
+      server still moves and T still advances.
+    cached_grad is None      → 'skip' (or no gating): a dropped push masks
+      the entire update out.
+
+    Returns (new_server, aux).
+    """
+    if cached_grad is not None:
+        g_eff = tree_where(push, grad, cached_grad)
+        return server_rules.apply_update(
+            scfg, server, g_eff, grad_ts, client_params=client_params)
+    cand, aux = server_rules.apply_update(
+        scfg, server, grad, grad_ts, client_params=client_params)
+    return tree_where(push, cand, server), aux
+
+
+# ---------------------------------------------------------------------------
+# serial application — the paper-faithful lock order
+# ---------------------------------------------------------------------------
+
+def serial_apply(scfg: ServerConfig, server: ServerState, grads, push,
+                 grad_ts, client_params=None):
+    """Apply pushed gradients one at a time in event order (lock = order).
+
+    `grads` leaves are [K, ...]; `push`/`grad_ts` are [K];
+    `client_params` (optional, [K, ...]) feeds gap-aware rules.
+    Returns (server, taus [K]).
+    """
+    xs = (grads, push, grad_ts)
+    if client_params is not None:
+        def body(sv, inp):
+            g_c, push_c, ts_c, cp_c = inp
+            new, aux = apply_gated(scfg, sv, g_c, push_c, ts_c,
+                                   client_params=cp_c)
+            return new, aux["tau"]
+        xs = xs + (client_params,)
+    else:
+        def body(sv, inp):
+            g_c, push_c, ts_c = inp
+            new, aux = apply_gated(scfg, sv, g_c, push_c, ts_c)
+            return new, aux["tau"]
+    return jax.lax.scan(body, server, xs)
+
+
+# ---------------------------------------------------------------------------
+# fused application — one masked-sum update over the whole event batch
+# ---------------------------------------------------------------------------
+
+def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
+                client_ts, client_params=None):
+    """One masked-sum application of all pushed gradients (beyond-paper).
+
+    Stats (n, b, v, extra) advance once with the mean pushed gradient; the
+    weight delta is Σ_c m_c·scale(v, τ_c)·g_c computed against the
+    *post-stats* statistics via the registered rule's `scale_leaf`, and T
+    advances by the number of pushes.  With `scfg.use_fused_kernel` and a
+    rule that declares `batched_pallas_mode`, the per-leaf reduction over
+    the client axis runs in one Pallas pass (`kernels/batched_update.py`).
+
+    Returns (server, taus [K]).
+    """
+    rule = server_rules.get_rule(scfg.rule)
+    if not rule.supports_fused:
+        raise ValueError(
+            f"rule {scfg.rule!r} does not support the fused apply mode")
+    n_push = jnp.sum(push.astype(jnp.int32))
+    pushf = push.astype(jnp.float32)
+    mean_g = jax.tree.map(
+        lambda g: jnp.einsum("c,c...->...", pushf, g) / jnp.maximum(n_push, 1),
+        grads,
+    )
+    has_push = n_push > 0
+    stats_state = rule.update_stats(scfg, server, mean_g)
+    server = tree_where(has_push, stats_state, server)
+
+    taus = server_rules.step_staleness(server.timestamp, client_ts)  # [K]
+
+    gap = None
+    if rule.needs_client_params and client_params is not None:
+        # per-client parameter-space divergence θ_T − θ_ts, leaves [K, ...]
+        gap = jax.tree.map(
+            lambda sp, cp: sp[None].astype(jnp.float32)
+            - cp.astype(jnp.float32),
+            server.params, client_params)
+
+    if (scfg.use_fused_kernel and rule.batched_pallas_mode is not None
+            and gap is None):
+        from repro.kernels.ops import batched_scale_apply
+        coeffs = (rule.fused_coeffs(scfg, taus) * pushf
+                  if rule.batched_pallas_mode == "coeff" else pushf)
+        new_params = batched_scale_apply(
+            server.params, grads, server.v, coeffs, taus,
+            lr=scfg.lr, eps=scfg.eps, mode=rule.batched_pallas_mode)
+    elif rule.batched_pallas_mode == "coeff" and gap is None:
+        # v-independent scale: the delta is a plain weighted sum over the
+        # event axis — one contraction per leaf, no [K, *s] scale tensor.
+        w = rule.fused_coeffs(scfg, taus) * pushf
+        new_params = jax.tree.map(
+            lambda p, g: p - jnp.einsum("k,k...->...", w, g),
+            server.params, grads)
+    else:
+        treedef = jax.tree.structure(server.v)
+        v_leaves = jax.tree.leaves(server.v)
+        g_leaves = jax.tree.leaves(grads)
+        gap_leaves = (jax.tree.leaves(gap) if gap is not None
+                      else [None] * len(v_leaves))
+        e_leaves = server_rules.extra_leaf_dicts(server.extra, server.v)
+
+        deltas = []
+        for v_leaf, g_leaf, e_leaf, gap_leaf in zip(
+                v_leaves, g_leaves, e_leaves, gap_leaves):
+            expand = (-1,) + (1,) * v_leaf.ndim
+            scale = rule.scale_leaf(
+                scfg, v_leaf[None], taus.reshape(expand),
+                extra=e_leaf, gap=gap_leaf)
+            m = pushf.reshape(expand)
+            deltas.append(jnp.sum(m * scale * g_leaf, axis=0))
+        delta = jax.tree.unflatten(treedef, deltas)
+        new_params = jax.tree.map(jnp.subtract, server.params, delta)
+    server = server._replace(
+        params=new_params, timestamp=server.timestamp + n_push
+    )
+    return server, taus
+
+
+# ---------------------------------------------------------------------------
+# deterministic duplicate-client resolution for event batches
+# ---------------------------------------------------------------------------
+
+def last_event_winners(clients, eligible=None):
+    """[K] bool: event k wins iff no later eligible event targets its client.
+
+    jnp scatter with duplicate indices has unspecified application order —
+    FRED's bitwise-determinism contract forbids relying on it.  This computes
+    the explicit last-event-wins mask (O(K²) booleans, negligible next to the
+    gradient work) so each surviving index is unique.
+    """
+    k = clients.shape[0]
+    order = jnp.arange(k)
+    if eligible is None:
+        eligible = jnp.ones((k,), bool)
+    later_same = (
+        (clients[None, :] == clients[:, None])
+        & eligible[None, :]
+        & (order[None, :] > order[:, None])
+    )
+    return eligible & ~jnp.any(later_same, axis=1)
+
+
+def last_event_scatter(tree, clients, values, eligible, num_slots):
+    """Scatter per-event `values` ([K, ...] leaves) into per-client `tree`
+    ([λ, ...] leaves) with deterministic last-eligible-event-wins semantics.
+
+    Losing/ineligible events are redirected to the out-of-bounds index
+    `num_slots` and dropped by the scatter, so the surviving indices are
+    unique — O(K) rows touched, never a fleet-sized copy.
+    """
+    win = last_event_winners(clients, eligible)
+    idx = jnp.where(win, clients, num_slots)
+    return jax.tree.map(
+        lambda l, v: l.at[idx].set(v, mode="drop"), tree, values)

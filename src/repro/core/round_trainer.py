@@ -16,15 +16,18 @@ the port (DESIGN.md §2) is the *decision structure* of FASGD/B-FASGD:
  - Pushed gradients update the server under any `core.rules` rule (FASGD's
    per-parameter α/(v·τ) modulation by default).
 
-Two application modes:
+The push/fetch/apply decision structure itself lives in `core/engine.py`
+(shared with the FRED simulator); this module is the thin SPMD adapter:
 
- - ``apply_mode='serial'`` (paper-faithful): pushed gradients are applied
-   one-at-a-time in client order via `lax.scan`, bit-identical to the lock
-   protocol with that arrival order; T advances by 1 per push.
- - ``apply_mode='fused'`` (beyond-paper): one masked-sum update
-   θ ← θ − Σ_c m_c·(α/(v·τ_c))·g_c with a single stats update on the mean
-   pushed gradient; one reduction instead of C sequential passes — the
-   collective-friendly schedule.  §Perf quantifies the difference.
+ - ``apply_mode='serial'`` (paper-faithful): `engine.serial_apply` — pushed
+   gradients one-at-a-time in client order via `lax.scan`, bit-identical to
+   the lock protocol with that arrival order; T advances by 1 per push.
+ - ``apply_mode='fused'`` (beyond-paper): `engine.fused_apply` — one
+   masked-sum update θ ← θ − Σ_c m_c·(α/(v·τ_c))·g_c with a single stats
+   update on the mean pushed gradient; one reduction instead of C sequential
+   passes — the collective-friendly schedule.  With
+   ``TrainerConfig(use_fused_kernel=True)`` the reduction runs in the
+   batched Pallas kernel for rules that support it.
 
 Dropped pushes follow ``drop_policy``:
  - ``'local_apply'`` (default): the client applies its own gradient to its
@@ -40,8 +43,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainerConfig
+from repro.core import engine
 from repro.core import rules as server_rules
-from repro.core.bandwidth import transmit_prob
+from repro.core.engine import Counters
 from repro.core.rules import ServerConfig, ServerState
 
 
@@ -50,6 +54,7 @@ class RoundState(NamedTuple):
     client_params: Any          # pytree, leaves [C, ...]
     client_ts: jnp.ndarray      # [C] int32
     round_idx: jnp.ndarray      # int32
+    counters: Counters          # shared engine bookkeeping (as in FRED)
 
 
 def server_config(tc: TrainerConfig) -> ServerConfig:
@@ -57,102 +62,19 @@ def server_config(tc: TrainerConfig) -> ServerConfig:
         rule=tc.rule, lr=tc.lr, gamma=tc.gamma, beta=tc.beta, eps=tc.eps,
         kappa=tc.kappa, poly_power=tc.poly_power,
         variant=tc.variant, num_clients=tc.num_round_clients,
+        use_fused_kernel=tc.use_fused_kernel,
     )
-
-
-def _stack(tree, n):
-    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), tree)
-
-
-def _tree_where(pred, a, b):
-    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
 def init_round_state(tc: TrainerConfig, params) -> RoundState:
     scfg = server_config(tc)
     return RoundState(
         server=server_rules.init(scfg, params),
-        client_params=_stack(params, tc.num_round_clients),
+        client_params=engine.tree_stack(params, tc.num_round_clients),
         client_ts=jnp.zeros((tc.num_round_clients,), jnp.int32),
         round_idx=jnp.zeros((), jnp.int32),
+        counters=engine.init_counters(),
     )
-
-
-def _serial_apply(scfg: ServerConfig, server: ServerState, grads, push,
-                  client_ts, client_params):
-    """Apply pushed gradients one at a time (paper's lock order = client order)."""
-
-    def body(sv, inp):
-        g_c, push_c, ts_c, cp_c = inp
-        cand, aux = server_rules.apply_update(scfg, sv, g_c, ts_c,
-                                              client_params=cp_c)
-        new = jax.tree.map(
-            lambda a, b: jnp.where(push_c, a, b), cand, sv
-        )
-        return new, aux["tau"]
-
-    server, taus = jax.lax.scan(
-        body, server, (grads, push, client_ts, client_params))
-    return server, taus
-
-
-def _fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
-                 client_ts, client_params):
-    """One masked-sum application of all pushed gradients (beyond-paper).
-
-    Stats (n, b, v, extra) advance once with the mean pushed gradient; the
-    weight delta is Σ_c m_c·scale(v, τ_c)·g_c computed against the
-    *post-stats* statistics via the registered rule's `scale_leaf`, and T
-    advances by the number of pushes.
-    """
-    rule = server_rules.get_rule(scfg.rule)
-    if not rule.supports_fused:
-        raise ValueError(
-            f"rule {scfg.rule!r} does not support the fused apply mode")
-    n_push = jnp.sum(push.astype(jnp.int32))
-    pushf = push.astype(jnp.float32)
-    mean_g = jax.tree.map(
-        lambda g: jnp.einsum("c,c...->...", pushf, g) / jnp.maximum(n_push, 1),
-        grads,
-    )
-    has_push = n_push > 0
-    stats_state = rule.update_stats(scfg, server, mean_g)
-    server = jax.tree.map(
-        lambda a, b: jnp.where(has_push, a, b), stats_state, server
-    )
-
-    taus = server_rules.step_staleness(server.timestamp, client_ts)  # [C]
-
-    gap = None
-    if rule.needs_client_params:
-        # per-client parameter-space divergence θ_T − θ_ts, leaves [C, ...]
-        gap = jax.tree.map(
-            lambda sp, cp: sp[None].astype(jnp.float32)
-            - cp.astype(jnp.float32),
-            server.params, client_params)
-
-    treedef = jax.tree.structure(server.v)
-    v_leaves = jax.tree.leaves(server.v)
-    g_leaves = jax.tree.leaves(grads)
-    gap_leaves = (jax.tree.leaves(gap) if gap is not None
-                  else [None] * len(v_leaves))
-    e_leaves = server_rules.extra_leaf_dicts(server.extra, server.v)
-
-    deltas = []
-    for v_leaf, g_leaf, e_leaf, gap_leaf in zip(
-            v_leaves, g_leaves, e_leaves, gap_leaves):
-        expand = (-1,) + (1,) * v_leaf.ndim
-        scale = rule.scale_leaf(
-            scfg, v_leaf[None], taus.reshape(expand),
-            extra=e_leaf, gap=gap_leaf)
-        m = pushf.reshape(expand)
-        deltas.append(jnp.sum(m * scale * g_leaf, axis=0))
-    delta = jax.tree.unflatten(treedef, deltas)
-    new_params = jax.tree.map(jnp.subtract, server.params, delta)
-    server = server._replace(
-        params=new_params, timestamp=server.timestamp + n_push
-    )
-    return server, taus
 
 
 def build_round_step(
@@ -173,24 +95,22 @@ def build_round_step(
 
         losses, grads = jax.vmap(grad_fn)(state.client_params, batch)
 
-        vb = server_rules.vbar(state.server)
         push = (
-            jax.random.uniform(k_push, (C,)) < transmit_prob(vb, tc.c_push, tc.eps)
+            engine.transmit_gate(k_push, state.server, tc.c_push, tc.eps, (C,))
             if tc.c_push > 0 else jnp.ones((C,), bool)
         )
 
         if apply_mode == "serial":
-            server, taus = _serial_apply(
+            server, taus = engine.serial_apply(
                 scfg, state.server, grads, push, state.client_ts,
                 state.client_params)
         else:
-            server, taus = _fused_apply(
+            server, taus = engine.fused_apply(
                 scfg, state.server, grads, push, state.client_ts,
                 state.client_params)
 
         fetch = (
-            jax.random.uniform(k_fetch, (C,)) < transmit_prob(
-                server_rules.vbar(server), tc.c_fetch, tc.eps)
+            engine.transmit_gate(k_fetch, server, tc.c_fetch, tc.eps, (C,))
             if tc.c_fetch > 0 else jnp.ones((C,), bool)
         )
 
@@ -211,6 +131,7 @@ def build_round_step(
             client_params=client_params,
             client_ts=client_ts,
             round_idx=state.round_idx + 1,
+            counters=engine.count_events(state.counters, push, fetch),
         )
         metrics = {
             "loss": jnp.mean(losses),

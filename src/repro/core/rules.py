@@ -227,8 +227,21 @@ class UpdateRule:
     synchronous: bool = False        # apply() buffers until a round completes
     needs_client_params: bool = False  # scale uses the gap θ_T − θ_ts
     requires_stats: bool = False     # rule consumes n/b/v (or extra stats)
-    supports_fused: bool = True      # usable in round_trainer's fused path
+    supports_fused: bool = True      # usable in the engine's fused apply path
     pallas_op: Optional[str] = None  # kernels.ops fast path, if any
+    # Batched Pallas scale-and-accumulate support (kernels/batched_update.py):
+    #   'coeff' — scale is a per-event scalar, v-independent: the rule
+    #             provides `fused_coeffs(config, taus) -> [K]` and the kernel
+    #             reduces Σ_k m_k·coeff_k·g_k in one HBM pass per leaf;
+    #   'fasgd' — scale = lr/(v·τ_k + eps) elementwise in v, computed inside
+    #             the kernel;
+    #   None    — not kernelizable (gap needs per-leaf gap tensors; ssgd is
+    #             a barrier).
+    batched_pallas_mode: Optional[str] = None
+
+    def fused_coeffs(self, config: ServerConfig, taus):
+        """Per-event scalar effective lr [K] for `batched_pallas_mode='coeff'`."""
+        raise NotImplementedError(self.name)
 
     def init_extra_state(self, config: ServerConfig, params):
         return None
@@ -275,27 +288,43 @@ def _bshape(v, tau):
 class AsgdRule(UpdateRule):
     """Plain async SGD: θ ← θ − α·g, staleness ignored (eq. 1)."""
 
+    batched_pallas_mode = "coeff"
+
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
         return jnp.full(_bshape(v, tau), config.lr, jnp.float32)
+
+    def fused_coeffs(self, config, taus):
+        return jnp.full_like(jnp.asarray(taus, jnp.float32), config.lr)
 
 
 @register_rule("sasgd")
 class SasgdRule(UpdateRule):
     """Staleness-aware SGD (Zhang et al.): α/τ (eq. 2)."""
 
+    batched_pallas_mode = "coeff"
+
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
         t = jnp.asarray(tau, jnp.float32)
         return jnp.broadcast_to(config.lr / t, _bshape(v, tau))
+
+    def fused_coeffs(self, config, taus):
+        return config.lr / jnp.asarray(taus, jnp.float32)
 
 
 @register_rule("exp")
 class ExpPenaltyRule(UpdateRule):
     """Exponential staleness penalty (Chan & Lane): α·e^{−κ(τ−1)}."""
 
+    batched_pallas_mode = "coeff"
+
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
         t = jnp.asarray(tau, jnp.float32)
         return jnp.broadcast_to(
             config.lr * jnp.exp(-config.kappa * (t - 1.0)), _bshape(v, tau))
+
+    def fused_coeffs(self, config, taus):
+        t = jnp.asarray(taus, jnp.float32)
+        return config.lr * jnp.exp(-config.kappa * (t - 1.0))
 
 
 @register_rule("poly")
@@ -307,10 +336,16 @@ class PolyRule(UpdateRule):
     staleness), p > 1 more harshly.
     """
 
+    batched_pallas_mode = "coeff"
+
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
         t = jnp.asarray(tau, jnp.float32)
         return jnp.broadcast_to(
             config.lr / t ** config.poly_power, _bshape(v, tau))
+
+    def fused_coeffs(self, config, taus):
+        t = jnp.asarray(taus, jnp.float32)
+        return config.lr / t ** config.poly_power
 
 
 @register_rule("fasgd")
@@ -319,6 +354,7 @@ class FasgdRule(UpdateRule):
 
     requires_stats = True
     pallas_op = "fasgd_update"
+    batched_pallas_mode = "fasgd"
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
         return config.lr / (v * jnp.asarray(tau, jnp.float32) + config.eps)

@@ -1,0 +1,92 @@
+"""Batched scale-and-accumulate Pallas TPU kernel for the fused apply path.
+
+The engine's fused application (core/engine.py) computes, per parameter leaf,
+
+    Δθ = Σ_k m_k · scale(v, τ_k) · g_k          (k over the event/client axis)
+
+Executed as XLA ops this broadcasts a [K, *s] scale tensor and reduces it —
+K+1 HBM-sized intermediates for a result that only ever needs θ, v, and one
+streaming pass over the K gradients.  Fused, the kernel reads each gradient
+tile once, keeps the accumulator in VMEM/VREGs, and writes θ once: exactly
+(K+2) reads + 1 write of the parameter footprint, the HBM lower bound.
+
+Two scale families cover every kernelizable registry rule
+(`UpdateRule.batched_pallas_mode`):
+
+ - ``mode='coeff'``: scale is a per-event *scalar* c_k (asgd / sasgd / exp /
+   poly — anything v-independent).  The push mask is folded into c_k.
+ - ``mode='fasgd'``: scale = lr / (v·τ_k + eps) elementwise in the std MA v
+   (paper eq. 7); the mask arrives as c_k ∈ {0, 1}.
+
+Layout follows `fasgd_update.py`: (rows, 128) lane-aligned tiles, gradients
+stacked [K, rows, 128]; per-event scalars (c_k, τ_k) live in SMEM so a
+different event batch does not recompile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+LANES = 128
+
+
+def _kernel(scal_ref, coeff_ref, tau_ref, p_ref, v_ref, g_ref, po_ref,
+            *, num_events: int, mode: str, eps: float):
+    lr = scal_ref[0]
+    block_shape = p_ref.shape
+    v = v_ref[...] if mode == "fasgd" else None
+
+    def body(k, acc):
+        g = g_ref[k].astype(jnp.float32)
+        if mode == "fasgd":
+            scale = lr / (v * tau_ref[k] + eps)            # eq. 7, per event
+            return acc + coeff_ref[k] * scale * g
+        return acc + coeff_ref[k] * g
+
+    acc = jax.lax.fori_loop(
+        0, num_events, body, jnp.zeros(block_shape, jnp.float32))
+    po_ref[...] = (p_ref[...].astype(jnp.float32) - acc).astype(po_ref.dtype)
+
+
+def batched_scale_apply_2d(
+    params: jax.Array,   # (R, 128) — any float dtype
+    grads: jax.Array,    # (K, R, 128)
+    v: jax.Array,        # (R, 128) float32 (read only in mode='fasgd')
+    coeffs: jax.Array,   # (K,) float32 — per-event scalar (mask folded in)
+    taus: jax.Array,     # (K,) float32
+    lr,
+    *,
+    eps: float = 1e-8,
+    mode: str = "fasgd",
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    """One fused Σ_k c_k·scale(v,τ_k)·g_k apply over tile-aligned buffers."""
+    assert mode in ("coeff", "fasgd"), mode
+    K, R, lanes = grads.shape
+    assert lanes == LANES and params.shape == (R, LANES), (grads.shape,
+                                                           params.shape)
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    gtile = pl.BlockSpec((K, block_rows, LANES), lambda i: (0, i, 0))
+    scalars = jnp.asarray(lr, jnp.float32).reshape(1)
+    kern = functools.partial(_kernel, num_events=K, mode=mode, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # (lr,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # coeffs [K]
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # taus [K]
+            tile, tile, gtile,
+        ],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((R, LANES), params.dtype),
+        interpret=interpret,
+    )(scalars, coeffs.astype(jnp.float32), taus.astype(jnp.float32),
+      params, v, grads)

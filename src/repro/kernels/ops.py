@@ -11,6 +11,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import batched_update as _bk
 from repro.kernels import fasgd_update as _fk
 from repro.kernels import flash_attention as _fa
 from repro.kernels.ref import attention_ref
@@ -66,6 +67,41 @@ def fasgd_update(params: Any, grads: Any, n: Any, b: Any, v: Any, lr, tau,
     flat = jax.tree.leaves(outs, is_leaf=lambda x: isinstance(x, tuple))
     unzip = tuple(jax.tree.unflatten(treedef, [t[i] for t in flat]) for i in range(4))
     return unzip  # (params, n, b, v)
+
+
+def batched_scale_apply(params: Any, grads: Any, v: Any, coeffs, taus,
+                        *, lr, eps=1e-8, mode="fasgd",
+                        block_rows: int = 256,
+                        interpret: bool | None = None):
+    """Fused Σ_k m_k·scale(v,τ_k)·g_k parameter update over arbitrary pytrees.
+
+    `grads` leaves carry a leading [K] event axis over the matching `params`
+    / `v` leaves; `coeffs`/`taus` are [K] per-event scalars.  Semantically
+    identical to the engine's generic per-leaf scale_leaf reduction for
+    rules with `batched_pallas_mode` ('coeff' or 'fasgd'); one HBM pass per
+    leaf instead of K+1 broadcast intermediates.
+    """
+    interpret = _auto_interpret(interpret)
+    K = jax.tree.leaves(grads)[0].shape[0]
+    # Bound the [K, rows, 128] gradient block to ~4 MB of VMEM.
+    rows_budget = max(8, (4 << 20) // (LANES * 4 * max(K, 1)))
+    block = min(block_rows, 1 << (rows_budget.bit_length() - 1))
+
+    def one(p, g, vv):
+        shape, dtype = p.shape, p.dtype
+        (p2, _), (v2, _) = _pad_to_tiles(p, block), _pad_to_tiles(vv, block)
+        gflat = g.reshape(K, -1)
+        pad = p2.shape[0] * LANES - gflat.shape[1]
+        if pad:
+            gflat = jnp.pad(gflat, ((0, 0), (0, pad)))
+        g2 = gflat.reshape(K, -1, LANES)
+        rows = min(block, p2.shape[0])
+        po = _bk.batched_scale_apply_2d(
+            p2, g2, v2, coeffs, taus, lr, eps=eps, mode=mode,
+            block_rows=rows, interpret=interpret)
+        return po.reshape(-1)[:p.size].reshape(shape).astype(dtype)
+
+    return jax.tree.map(one, params, grads, v)
 
 
 def attention(q, k, v, *, causal=True, window=0, sm_scale=None,

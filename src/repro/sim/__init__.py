@@ -1,1 +1,8 @@
-from repro.sim.fred import SimConfig, SimState, run_simulation, build_step_fn, init_sim
+from repro.sim.fred import (
+    SimConfig,
+    SimState,
+    run_simulation,
+    build_step_fn,
+    init_sim,
+    shard_fleet,
+)

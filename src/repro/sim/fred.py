@@ -7,15 +7,31 @@ seed, on one machine, with no real network.
 
 Semantics follow the paper's Async SGD protocol:
 
-* each simulation step = one client finishing one minibatch gradient;
+* each simulation *event* = one client finishing one minibatch gradient;
 * the dispatcher decides *which* client that is (uniform / round-robin /
   heterogeneous-speed schedules);
 * the gradient is computed on the parameters that client fetched at its last
   interaction — its *stale* copy — and carries that copy's timestamp;
 * the server applies the update under the configured rule (any rule in the
-  `core.rules` registry — ASGD / SASGD / FASGD / exp-penalty / poly /
-  gap-aware / sync) and the client receives the new parameters — unless
+  `core.rules` registry) and the client receives the new parameters — unless
   B-FASGD gating drops the push and/or the fetch (paper §2.3).
+
+The protocol decision structure (gates, gated/serial/fused application,
+counters) lives in `core/engine.py`, shared with the SPMD round trainer.
+
+**Event batching** (the λ-scaling hot path): each `lax.scan` step advances
+`events_per_step = K` client events.
+
+* ``apply_mode='serial'`` (default, paper-faithful): the K events are
+  processed one at a time inside the step — for every K this produces the
+  *bitwise identical* trajectory to the legacy one-event-per-step simulator,
+  because per-event RNG keys are derived from the global event index.
+* ``apply_mode='fused'``: the K gradients are computed with one `vmap`
+  (optionally `shard_map`-sharded over devices) and applied through the
+  engine's fused masked-sum path — one stats step on the mean pushed
+  gradient, T advances by the number of pushes.  This models K clients
+  finishing within one dispatch window (they all read the pre-window server
+  state) and is the ~K× faster mode that makes λ ≥ 1024 sweeps tractable.
 
 Dropped pushes follow the paper's server-side gradient cache by default
 (`drop_policy='cache'`: re-apply that client's most recent transmitted
@@ -24,13 +40,23 @@ gradient), or `'skip'` (no server update at that opportunity).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core import rules as server_rules
-from repro.core.bandwidth import BandwidthConfig, per_tensor_fetch_mask, transmit_prob
+from repro.core.bandwidth import BandwidthConfig, per_tensor_fetch_mask
+from repro.core.engine import (
+    Counters,
+    tree_index,
+    tree_set,
+    tree_stack,
+    tree_where,
+    tree_where_axis,
+)
 from repro.core.rules import ServerConfig, ServerState
 
 
@@ -43,23 +69,24 @@ class SimConfig:
     dispatcher: str = "uniform"   # 'uniform' | 'roundrobin' | 'heterogeneous'
     het_skew: float = 1.5         # log-speed std for the heterogeneous schedule
     seed: int = 0
+    # --- event batching (core/engine.py) ---
+    events_per_step: int = 1      # K client events per scan step
+    apply_mode: str = "serial"    # 'serial' (paper-faithful) | 'fused'
 
     def __post_init__(self):
         assert self.dispatcher in ("uniform", "roundrobin", "heterogeneous")
-        if server_rules.get_rule(self.server.rule).synchronous:
+        assert self.apply_mode in ("serial", "fused"), self.apply_mode
+        assert self.events_per_step >= 1, self.events_per_step
+        rule = server_rules.get_rule(self.server.rule)
+        if rule.synchronous:
             # A synchronous barrier only makes sense with a fair schedule.
             assert self.dispatcher == "roundrobin", \
                 f"{self.server.rule} requires roundrobin"
-
-
-class Counters(NamedTuple):
-    push_potential: jnp.ndarray
-    push_actual: jnp.ndarray
-    fetch_potential: jnp.ndarray
-    fetch_actual: jnp.ndarray
-    # per-tensor mode: byte-resolution accounting (floats)
-    fetch_bytes_sent: jnp.ndarray = jnp.zeros((), jnp.float32)
-    fetch_bytes_total: jnp.ndarray = jnp.zeros((), jnp.float32)
+        if self.apply_mode == "fused":
+            assert rule.supports_fused, \
+                f"rule {self.server.rule!r} does not support apply_mode='fused'"
+            assert not self.bandwidth.per_tensor_fetch, \
+                "per_tensor_fetch requires apply_mode='serial'"
 
 
 class SimState(NamedTuple):
@@ -74,54 +101,64 @@ class SimState(NamedTuple):
     client_leaf_ts: Optional[jnp.ndarray] = None
 
 
-def _tree_index(tree, i):
-    return jax.tree.map(lambda l: l[i], tree)
-
-
-def _tree_set(tree, i, val):
-    return jax.tree.map(lambda l, v: l.at[i].set(v), tree, val)
-
-
-def _tree_where(pred, a, b):
-    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
-
-
-def _tree_stack(tree, n):
-    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), tree)
-
-
 def init_sim(config: SimConfig, params) -> SimState:
     lam = config.num_clients
     server = server_rules.init(config.server, params)
     use_cache = config.bandwidth.c_push > 0 and config.bandwidth.drop_policy == "cache"
-    zero = jnp.zeros((), jnp.int32)
-    zf = jnp.zeros((), jnp.float32)
     return SimState(
         server=server,
-        client_params=_tree_stack(params, lam),
+        client_params=tree_stack(params, lam),
         client_ts=jnp.zeros((lam,), jnp.int32),
-        grad_cache=jax.tree.map(jnp.zeros_like, _tree_stack(params, lam))
+        grad_cache=jax.tree.map(jnp.zeros_like, tree_stack(params, lam))
         if use_cache
         else None,
-        rr_pos=zero,
-        counters=Counters(zero, zero, zero, zero, zf, zf),
+        rr_pos=jnp.zeros((), jnp.int32),
+        counters=engine.init_counters(),
         client_leaf_ts=(jnp.zeros((lam, len(jax.tree.leaves(params))), jnp.int32)
                         if config.bandwidth.per_tensor_fetch else None),
     )
 
 
-def _dispatch(config: SimConfig, state: SimState, key):
+def shard_fleet(state: SimState, mesh, client_axis: str = "clients") -> SimState:
+    """Shard every [λ, ...] fleet array over `mesh[client_axis]`; the server
+    state stays replicated.  The mesh axis size must divide λ (and must
+    divide `events_per_step` for the shard_map'd event batch)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def put(tree):
+        if tree is None:
+            return None
+        return jax.tree.map(
+            lambda l: jax.device_put(
+                l, NamedSharding(mesh, PartitionSpec(client_axis))), tree)
+
+    return state._replace(
+        client_params=put(state.client_params),
+        client_ts=put(state.client_ts),
+        grad_cache=put(state.grad_cache),
+        client_leaf_ts=put(state.client_leaf_ts),
+    )
+
+
+def _het_logits(config: SimConfig):
+    """Fixed per-client speed logits, drawn once from the config seed (hoisted
+    out of the traced step — the draw used to re-trace every step)."""
+    if config.dispatcher != "heterogeneous":
+        return None
+    speed_key = jax.random.PRNGKey(config.seed ^ 0x5EED)
+    return config.het_skew * jax.random.normal(speed_key, (config.num_clients,))
+
+
+def _dispatch(config: SimConfig, rr_pos, key, het_logits):
     lam = config.num_clients
     if config.dispatcher == "roundrobin":
-        return state.rr_pos % lam
+        return rr_pos % lam
     if config.dispatcher == "uniform":
         return jax.random.randint(key, (), 0, lam)
-    # heterogeneous: fixed per-client speeds drawn once from the config seed —
-    # faster clients are picked proportionally more often (so slow clients
-    # accumulate more staleness, the paper's "heterogeneous cluster" regime).
-    speed_key = jax.random.PRNGKey(config.seed ^ 0x5EED)
-    logits = config.het_skew * jax.random.normal(speed_key, (lam,))
-    return jax.random.categorical(key, logits)
+    # heterogeneous: faster clients are picked proportionally more often (so
+    # slow clients accumulate more staleness, the paper's "heterogeneous
+    # cluster" regime).
+    return jax.random.categorical(key, het_logits)
 
 
 def build_step_fn(
@@ -129,25 +166,36 @@ def build_step_fn(
     loss_fn: Callable,          # loss_fn(params, xb, yb) -> scalar
     data_x,
     data_y,
+    events: Optional[int] = None,   # override config.events_per_step
+    mesh=None,                      # optional: shard_map grads over the
+    client_axis: str = "clients",   # event axis of this mesh axis
 ):
-    """Returns step(state, key) -> (state, metrics) for lax.scan."""
+    """Returns step(state, keys) -> (state, metrics) for lax.scan.
+
+    `keys` carries one PRNG key per event, shape [K, ...]; metrics leaves
+    are per-event [K] arrays.  Keys must be derived from the *global* event
+    index (see `run_simulation`) so serial trajectories are K-invariant.
+    """
     grad_fn = jax.value_and_grad(loss_fn)
     bw = config.bandwidth
     scfg = config.server
+    lam = config.num_clients
+    K = events if events is not None else config.events_per_step
+    het_logits = _het_logits(config)
 
-    def step(state: SimState, key):
+    def event_body(state: SimState, key):
+        """One client event — the paper's protocol, verbatim."""
         k_disp, k_batch, k_push, k_fetch = jax.random.split(key, 4)
-        c = _dispatch(config, state, k_disp)
+        c = _dispatch(config, state.rr_pos, k_disp, het_logits)
 
         # --- client computes a stochastic gradient on its (stale) params ---
         idx = jax.random.randint(k_batch, (config.batch_size,), 0, data_x.shape[0])
         xb, yb = data_x[idx], data_y[idx]
-        p_c = _tree_index(state.client_params, c)
+        p_c = tree_index(state.client_params, c)
         loss, g = grad_fn(p_c, xb, yb)
 
         # --- push gate (B-FASGD eq. 9) ---
-        vb = server_rules.vbar(state.server)
-        push = jax.random.uniform(k_push) < transmit_prob(vb, bw.c_push, bw.eps)
+        push = engine.transmit_gate(k_push, state.server, bw.c_push, bw.eps)
 
         if bw.per_tensor_fetch:
             # per-tensor timestamps → per-leaf staleness in the update rule
@@ -157,22 +205,18 @@ def build_step_fn(
                 treedef, [leaf_ts[i] for i in range(leaf_ts.shape[0])])
         else:
             grad_ts = state.client_ts[c]
-        if state.grad_cache is not None:
-            # paper's choice: a dropped push re-applies the client's most
-            # recent transmitted gradient from the server-side cache.
-            g_eff = _tree_where(push, g, _tree_index(state.grad_cache, c))
-            new_server, aux = server_rules.apply_update(
-                scfg, state.server, g_eff, grad_ts, client_params=p_c)
+
+        # --- gated server application (engine: cache / skip drop policy) ---
+        cached = (tree_index(state.grad_cache, c)
+                  if state.grad_cache is not None else None)
+        new_server, aux = engine.apply_gated(
+            scfg, state.server, g, push, grad_ts,
+            client_params=p_c, cached_grad=cached)
+        grad_cache = state.grad_cache
+        if grad_cache is not None:
             grad_cache = jax.tree.map(
                 lambda cache, gv: cache.at[c].set(jnp.where(push, gv, cache[c])),
-                state.grad_cache,
-                g,
-            )
-        else:
-            cand_server, aux = server_rules.apply_update(
-                scfg, state.server, g, grad_ts, client_params=p_c)
-            new_server = _tree_where(push, cand_server, state.server)
-            grad_cache = None
+                grad_cache, g)
 
         # --- fetch gate ---
         if bw.per_tensor_fetch:
@@ -189,13 +233,11 @@ def build_step_fn(
                 leaf_mask, new_server.timestamp, state.client_leaf_ts[c])
             client_leaf_ts = state.client_leaf_ts.at[c].set(new_leaf_ts)
         else:
-            fetch = jax.random.uniform(k_fetch) < transmit_prob(
-                server_rules.vbar(new_server), bw.c_fetch, bw.eps
-            )
+            fetch = engine.transmit_gate(k_fetch, new_server, bw.c_fetch, bw.eps)
             sent = total = None
             client_leaf_ts = state.client_leaf_ts
-            new_p_c = _tree_where(fetch, new_server.params, p_c)
-        client_params = _tree_set(state.client_params, c, new_p_c)
+            new_p_c = tree_where(fetch, new_server.params, p_c)
+        client_params = tree_set(state.client_params, c, new_p_c)
         client_ts = state.client_ts.at[c].set(
             jnp.where(fetch, new_server.timestamp, state.client_ts[c])
         )
@@ -211,17 +253,8 @@ def build_step_fn(
             )
             client_ts = jnp.where(applied, new_server.timestamp, client_ts)
 
-        one = jnp.ones((), jnp.int32)
-        counters = Counters(
-            push_potential=state.counters.push_potential + one,
-            push_actual=state.counters.push_actual + push.astype(jnp.int32),
-            fetch_potential=state.counters.fetch_potential + one,
-            fetch_actual=state.counters.fetch_actual + fetch.astype(jnp.int32),
-            fetch_bytes_sent=state.counters.fetch_bytes_sent
-            + (sent if sent is not None else jnp.zeros((), jnp.float32)),
-            fetch_bytes_total=state.counters.fetch_bytes_total
-            + (jnp.float32(total) if total is not None else jnp.zeros((), jnp.float32)),
-        )
+        counters = engine.count_events(
+            state.counters, push, fetch, bytes_sent=sent, bytes_total=total)
 
         new_state = SimState(
             server=new_server,
@@ -241,6 +274,99 @@ def build_step_fn(
         }
         return new_state, metrics
 
+    if config.apply_mode == "serial":
+        def step(state: SimState, keys):
+            return jax.lax.scan(event_body, state, keys)
+        return step
+
+    # ----- fused: all K events advance in one batched protocol round -----
+    vgrad = jax.vmap(grad_fn)
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+        spec = PartitionSpec(client_axis)
+        vgrad = shard_map(
+            jax.vmap(grad_fn), mesh=mesh,
+            in_specs=(spec, spec, spec), out_specs=(spec, spec),
+            check_rep=False)
+
+    def step(state: SimState, keys):
+        ks = jax.vmap(lambda k: jax.random.split(k, 4))(keys)    # [K, 4, ...]
+        k_disp, k_batch = ks[:, 0], ks[:, 1]
+        k_push, k_fetch = ks[:, 2], ks[:, 3]
+
+        # --- dispatch K events (λ-vectorized) ---
+        if config.dispatcher == "roundrobin":
+            cs = (state.rr_pos + jnp.arange(K)) % lam
+        elif config.dispatcher == "uniform":
+            cs = jax.vmap(lambda k: jax.random.randint(k, (), 0, lam))(k_disp)
+        else:
+            cs = jax.vmap(
+                lambda k: jax.random.categorical(k, het_logits))(k_disp)
+
+        # --- K stale-copy gradients in one vmap (the K× hot path) ---
+        idx = jax.vmap(
+            lambda k: jax.random.randint(
+                k, (config.batch_size,), 0, data_x.shape[0]))(k_batch)
+        xb, yb = data_x[idx], data_y[idx]                        # [K, μ, ...]
+        p_e = tree_index(state.client_params, cs)                # [K, ...]
+        losses, grads = vgrad(p_e, xb, yb)
+
+        # --- push gates (pre-window server state, like the serial path) ---
+        push = engine.transmit_gate(
+            k_push[0], state.server, bw.c_push, bw.eps, shape=(K,))
+        grad_ts = state.client_ts[cs]                            # [K]
+
+        if state.grad_cache is not None:
+            # cache policy: every opportunity applies *some* gradient, so the
+            # fused mask is all-ones over the effective gradients.
+            g_eff = tree_where_axis(
+                push, grads, tree_index(state.grad_cache, cs))
+            new_server, taus = engine.fused_apply(
+                scfg, state.server, g_eff, jnp.ones((K,), bool), grad_ts,
+                client_params=p_e)
+            grad_cache = engine.last_event_scatter(
+                state.grad_cache, cs, grads, push, lam)
+        else:
+            new_server, taus = engine.fused_apply(
+                scfg, state.server, grads, push, grad_ts,
+                client_params=p_e)
+            grad_cache = None
+
+        # --- fetch gates (post-apply server state) ---
+        fetch = engine.transmit_gate(
+            k_fetch[0], new_server, bw.c_fetch, bw.eps, shape=(K,))
+        # Every fetch delivers the same canonical parameters, so duplicate
+        # clients in the batch all write identical rows — the scatter is
+        # deterministic and touches K rows, never the full λ fleet.
+        fetch_idx = jnp.where(fetch, cs, lam)          # dropped when ¬fetch
+        client_params = jax.tree.map(
+            lambda cp, sp: cp.at[fetch_idx].set(
+                jnp.broadcast_to(sp[None], (K,) + sp.shape), mode="drop"),
+            state.client_params, new_server.params)
+        client_ts = state.client_ts.at[fetch_idx].set(
+            jnp.broadcast_to(new_server.timestamp, (K,)), mode="drop")
+
+        counters = engine.count_events(state.counters, push, fetch)
+
+        new_state = SimState(
+            server=new_server,
+            client_params=client_params,
+            client_ts=client_ts,
+            grad_cache=grad_cache,
+            rr_pos=state.rr_pos + K,
+            counters=counters,
+            client_leaf_ts=state.client_leaf_ts,
+        )
+        metrics = {
+            "loss": losses,
+            "tau": taus,
+            "client": cs,
+            "pushed": push,
+            "fetched": fetch,
+        }
+        return new_state, metrics
+
     return step
 
 
@@ -254,34 +380,62 @@ def run_simulation(
     eval_every: int = 500,
     eval_fn: Optional[Callable] = None,   # eval_fn(server_params) -> scalar cost
     collect_step_metrics: bool = False,
+    mesh=None,                            # optional client-axis shard_map mesh
+    client_axis: str = "clients",
 ):
     """Run the deterministic simulation; returns a results dict.
 
-    The scan is chunked at `eval_every` so validation cost is measured on the
-    *server* parameters periodically, exactly like the paper's figures.
+    `num_steps` counts client *events* and is honored exactly — with
+    `events_per_step = K` each scan step advances K events and a shorter
+    final batch covers any remainder.  Validation cost is measured on the
+    *server* parameters every `eval_every` events, exactly like the paper's
+    figures.
     """
     state = init_sim(config, init_params)
-    step = build_step_fn(config, loss_fn, data_x, data_y)
+    if mesh is not None:
+        state = shard_fleet(state, mesh, client_axis)
+    K = config.events_per_step
+    base = jax.random.PRNGKey(config.seed)
 
-    @jax.jit
-    def run_chunk(state, chunk_id):
-        base = jax.random.PRNGKey(config.seed)
-        keys = jax.vmap(
-            lambda i: jax.random.fold_in(base, i)
-        )(chunk_id * eval_every + jnp.arange(eval_every))
-        return jax.lax.scan(step, state, keys)
+    step_fns = {}
+
+    def get_step(k_events):
+        if k_events not in step_fns:
+            step_fns[k_events] = build_step_fn(
+                config, loss_fn, data_x, data_y, events=k_events,
+                mesh=mesh, client_axis=client_axis)
+        return step_fns[k_events]
+
+    @functools.partial(jax.jit, static_argnames=("n_batches", "k_events"))
+    def run_span(state, start_event, n_batches, k_events):
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            start_event + jnp.arange(n_batches * k_events))
+        keys = keys.reshape((n_batches, k_events) + keys.shape[1:])
+        return jax.lax.scan(get_step(k_events), state, keys)
 
     eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
 
+    def collect(metrics):
+        train_losses.append(metrics["loss"].reshape(-1))
+        taus.append(metrics["tau"].reshape(-1))
+
     curve_steps, curve_cost, train_losses, taus = [], [], [], []
-    n_chunks = max(1, num_steps // eval_every)
-    for chunk in range(n_chunks):
-        state, metrics = run_chunk(state, chunk)
-        if collect_step_metrics:
-            train_losses.append(metrics["loss"])
-            taus.append(metrics["tau"])
+    done = 0
+    while done < num_steps:
+        span = min(eval_every, num_steps - done)
+        n_batches, rem = divmod(span, K)
+        if n_batches:
+            state, metrics = run_span(state, jnp.int32(done), n_batches, K)
+            if collect_step_metrics:
+                collect(metrics)
+            done += n_batches * K
+        if rem:
+            state, metrics = run_span(state, jnp.int32(done), 1, rem)
+            if collect_step_metrics:
+                collect(metrics)
+            done += rem
         if eval_jit is not None:
-            curve_steps.append((chunk + 1) * eval_every)
+            curve_steps.append(done)
             curve_cost.append(float(eval_jit(state.server.params)))
 
     out = {
