@@ -15,6 +15,7 @@ from repro.models.mlp import init_mlp, nll_loss
 from repro.sim.fred import SimConfig, run_simulation
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def mnist_experiment(
@@ -22,6 +23,7 @@ def mnist_experiment(
     c_push: float = 0.0, c_fetch: float = 0.0, variant: str = "intent",
     seed: int = 0, eval_every: int = 0, drop_policy: str = "cache",
     dispatcher: str = "uniform", per_tensor_fetch: bool = False,
+    per_tensor_push: bool = False,
     events_per_step: int = 1, apply_mode: str = "serial",
     sizes: tuple = (784, 200, 10),
     rule_kwargs: dict | None = None,
@@ -47,7 +49,8 @@ def mnist_experiment(
             **(rule_kwargs or {})),
         bandwidth=BandwidthConfig(c_push=c_push, c_fetch=c_fetch,
                                   drop_policy=drop_policy,
-                                  per_tensor_fetch=per_tensor_fetch),
+                                  per_tensor_fetch=per_tensor_fetch,
+                                  per_tensor_push=per_tensor_push),
         seed=seed,
         events_per_step=events_per_step,
         apply_mode=apply_mode,
@@ -116,6 +119,17 @@ def tune_lr(rule: str, lam: int, mu: int, steps: int, seed: int = 0):
 def save(name: str, payload) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def save_root(name: str, payload) -> str:
+    """Write a tracked ``BENCH_*.json`` at the repo root (the PR-over-PR
+    perf-trajectory contract, schema-checked by
+    scripts/check_bench_schema.py)."""
+    assert name.startswith("BENCH_") and name.endswith(".json"), name
+    path = os.path.join(REPO_ROOT, name)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path

@@ -1,12 +1,21 @@
 """Kernel microbenchmarks.
 
-The fused FASGD server update is memory-bound: its value is HBM-pass count.
-Real wall-clock on this container is CPU time (not representative of TPU),
-so we report BOTH:
+The fused server-update kernels are memory-bound: their value is HBM-pass
+count.  Real wall-clock on this container is CPU time (not representative
+of TPU), so we report BOTH:
   · the analytic HBM-traffic model (bytes fused vs unfused — the TPU-side
     speedup bound), and
   · measured CPU wall time of the jnp reference vs XLA-fused version
     (interpret-mode Pallas timing is meaningless and excluded by default).
+
+Covers both kernels:
+  · ``fasgd_update`` — one gradient, eqs. 4–8 fused (`kernels/fasgd_update`);
+  · ``batched_update`` — the fused-apply event batch, Σ_k m_k·c_k·
+    scale(v,τ_k)·g_k over K gradients (`kernels/batched_update`), per-leaf
+    mask/τ SMEM vectors included.
+
+Writes ``benchmarks/results/kernels.json`` and ``BENCH_kernels.json`` at
+the repo root (schema-checked in CI).
 """
 from __future__ import annotations
 
@@ -18,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ref import fasgd_update_ref
-from benchmarks.common import save
+from benchmarks.common import save, save_root
 
 
 def hbm_model(n_params: int, dtype_bytes: int = 4):
@@ -37,8 +46,29 @@ def hbm_model(n_params: int, dtype_bytes: int = 4):
     }
 
 
+def hbm_model_batched(n_params: int, num_events: int, dtype_bytes: int = 4):
+    """Bytes moved per fused-apply event batch, kernel vs broadcast XLA.
+
+    Unfused XLA (the engine's generic per-leaf scale_leaf reduction): the
+    [K, *s] scale tensor is materialized (write K, read v ≈ 1), the masked
+    product m·scale·g materialized (read scale K + g K, write K), reduced
+    over the event axis (read K), and θ updated (r+w) ≈ 5K+3 passes of the
+    parameter footprint.
+    Fused Pallas (`batched_scale_apply`): read θ, v, and each gradient tile
+    once, accumulator lives in VMEM/VREGs, write θ once = (K+2) reads +
+    1 write = K+3 passes — the HBM lower bound for this contraction.
+    """
+    K = num_events
+    return {
+        "num_events": K,
+        "unfused_bytes": (5 * K + 3) * n_params * dtype_bytes,
+        "fused_bytes": (K + 3) * n_params * dtype_bytes,
+        "bound_speedup": round((5 * K + 3) / (K + 3), 2),
+    }
+
+
 def time_fn(f, *args, iters=20):
-    f(*args)[0].block_until_ready()
+    jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = f(*args)
@@ -46,7 +76,14 @@ def time_fn(f, *args, iters=20):
     return (time.perf_counter() - t0) / iters
 
 
-def run(rows=1 << 14, iters=20, include_interpret=False):
+def batched_ref(p, g, v, coeffs, taus, masks, lr, eps=1e-8):
+    """jnp oracle of the batched kernel: broadcast [K, R, 128] scale, reduce."""
+    scale = lr / (v[None] * taus[:, None, None] + eps)
+    w = (masks * coeffs)[:, None, None]
+    return p - jnp.sum(w * scale * g.astype(jnp.float32), axis=0)
+
+
+def run_fasgd(rows, iters, include_interpret):
     lanes = 128
     n = rows * lanes
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -76,20 +113,80 @@ def run(rows=1 << 14, iters=20, include_interpret=False):
     np.testing.assert_allclose(np.asarray(po), np.asarray(pr), rtol=1e-5,
                                atol=1e-6)
     out["allclose_vs_ref"] = True
+    return out
+
+
+def run_batched(rows, num_events, iters, include_interpret):
+    """HBM roofline + measured timing for the batched scale-and-accumulate
+    kernel (the ROADMAP item: same treatment as `fasgd_update`)."""
+    lanes = 128
+    n = rows * lanes
+    K = num_events
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    p = jax.random.normal(ks[0], (rows, lanes))
+    g = jax.random.normal(ks[1], (K, rows, lanes)) * 0.1
+    v = 1.0 + 0.1 * jax.random.normal(ks[2], (rows, lanes))
+    taus = 1.0 + jnp.abs(jax.random.normal(ks[3], (K,))) * 3.0
+    coeffs = jnp.ones((K,), jnp.float32)
+    masks = (jax.random.uniform(ks[4], (K,)) < 0.7).astype(jnp.float32)
+
+    ref_jit = jax.jit(lambda *a: batched_ref(*a, 0.01))
+    t_ref = time_fn(ref_jit, p, g, v, coeffs, taus, masks, iters=iters)
+
+    out = {
+        "n_params": n,
+        "num_events": K,
+        "ref_jit_us": t_ref * 1e6,
+        "hbm_model": hbm_model_batched(n, K),
+    }
+    if include_interpret:
+        from repro.kernels.batched_update import batched_scale_apply_2d
+        k_jit = jax.jit(lambda *a: batched_scale_apply_2d(
+            *a, 0.01, masks=masks, mode="fasgd", interpret=True))
+        out["kernel_interpret_us"] = time_fn(
+            k_jit, p, g, v, coeffs, taus, iters=3) * 1e6
+
+    # correctness cross-check (per-event mask + τ SMEM vectors included)
+    from repro.kernels.batched_update import batched_scale_apply_2d
+    po = batched_scale_apply_2d(p, g, v, coeffs, taus, 0.01, masks=masks,
+                                mode="fasgd", block_rows=min(rows, 256),
+                                interpret=True)
+    pr = batched_ref(p, g, v, coeffs, taus, masks, 0.01)
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pr), rtol=1e-5,
+                               atol=1e-6)
+    out["allclose_vs_ref"] = True
+    return out
+
+
+def run(rows=1 << 14, num_events=16, iters=20, include_interpret=False):
+    out = {
+        "fasgd_update": run_fasgd(rows, iters, include_interpret),
+        "batched_update": run_batched(rows, num_events, iters,
+                                      include_interpret),
+    }
     save("kernels.json", out)
+    save_root("BENCH_kernels.json", out)
     return out
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=1 << 14)
+    ap.add_argument("--events", type=int, default=16,
+                    help="event-batch size K for the batched kernel")
     ap.add_argument("--interpret", action="store_true")
     args = ap.parse_args()
-    out = run(args.rows, include_interpret=args.interpret)
-    m = out["hbm_model"]
-    print(f"  kernels: n={out['n_params']:,} ref_jit={out['ref_jit_us']:.0f}us "
-          f"hbm-bound speedup={m['bound_speedup']:.2f}x "
-          f"allclose={out['allclose_vs_ref']}")
+    out = run(args.rows, num_events=args.events,
+              include_interpret=args.interpret)
+    f, bk = out["fasgd_update"], out["batched_update"]
+    print(f"  fasgd_update:   n={f['n_params']:,} "
+          f"ref_jit={f['ref_jit_us']:.0f}us "
+          f"hbm-bound speedup={f['hbm_model']['bound_speedup']:.2f}x "
+          f"allclose={f['allclose_vs_ref']}")
+    print(f"  batched_update: n={bk['n_params']:,} K={bk['num_events']} "
+          f"ref_jit={bk['ref_jit_us']:.0f}us "
+          f"hbm-bound speedup={bk['hbm_model']['bound_speedup']:.2f}x "
+          f"allclose={bk['allclose_vs_ref']}")
 
 
 if __name__ == "__main__":

@@ -29,7 +29,6 @@ Writes ``BENCH_sim_throughput.json`` at the repo root (and a copy under
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -41,9 +40,7 @@ from repro.data.mnist import load_mnist
 from repro.models.mlp import init_mlp, nll_loss
 from repro.sim.fred import SimConfig, build_step_fn, init_sim
 
-from benchmarks.common import RESULTS_DIR, save
-
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from benchmarks.common import RESULTS_DIR, save, save_root
 
 SIZES = (784, 16, 10)   # protocol benchmark model (see module docstring)
 MU = 4
@@ -133,9 +130,7 @@ def main():
         "quick": args.quick,
         "rows": rows,
     }
-    path = os.path.join(REPO_ROOT, "BENCH_sim_throughput.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+    path = save_root("BENCH_sim_throughput.json", payload)
     save("sim_throughput.json", payload)
     print(f"wrote {path} (and {os.path.join(RESULTS_DIR, 'sim_throughput.json')})")
     return 0

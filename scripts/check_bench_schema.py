@@ -1,0 +1,164 @@
+"""Validate every committed ``BENCH_*.json`` against a shared schema.
+
+Benchmark JSON is consumed by CI artifact tooling and PR-over-PR trend
+reading; a silently renamed or dropped field breaks those consumers without
+failing any test.  This script pins the contract: each ``BENCH_*.json`` at
+the repo root must carry its schema's required fields with the right types
+(extra fields are allowed — the schema is a floor, not a ceiling).
+
+No third-party deps (the container must not grow any): the schema language
+is a tiny recursive spec —
+
+    "int" | "number" | "str" | "bool"      leaf types (number = int|float)
+    {...}                                  dict with required keys
+    ("list", spec)                         non-empty list, every item matches
+    ("optional", spec)                     key may be absent or null
+                                           (quick-mode / no-qualifying-run)
+
+Run: ``python scripts/check_bench_schema.py`` (exit 1 on any violation).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_HBM_MODEL = {
+    "unfused_bytes": "number",
+    "fused_bytes": "number",
+    "bound_speedup": "number",
+}
+
+_KERNEL_ENTRY = {
+    "n_params": "int",
+    "ref_jit_us": "number",
+    "hbm_model": _HBM_MODEL,
+    "allclose_vs_ref": "bool",
+}
+
+SCHEMAS = {
+    "BENCH_sim_throughput.json": {
+        "model_sizes": ("list", "int"),
+        "batch_size": "int",
+        "methodology": "str",
+        "quick": "bool",
+        "rows": ("list", {
+            "rule": "str",
+            "lam": "int",
+            "events_per_step": "int",
+            "serial_events_per_sec": "number",
+            "fused_events_per_sec": "number",
+            "speedup": "number",
+            "serial_compile_s": "number",
+            "fused_compile_s": "number",
+        }),
+    },
+    "BENCH_kernels.json": {
+        "fasgd_update": _KERNEL_ENTRY,
+        "batched_update": dict(_KERNEL_ENTRY, num_events="int"),
+    },
+    "BENCH_fig3_bandwidth.json": {
+        "quick": "bool",
+        "steps": "int",
+        "lam": "int",
+        "summary": {
+            "baseline_cost": "number",
+            "baseline_bytes": "number",
+            "per_tensor_push_fetch_total_reduction": ("optional", "number"),
+        },
+        "rows": ("list", {
+            "which": "str",
+            "rule": "str",
+            "c_push": "number",
+            "c_fetch": "number",
+            "final_cost": "number",
+            "push_ratio": "number",
+            "fetch_ratio": "number",
+            "bytes_sent": "number",
+            "bytes_total": "number",
+        }),
+    },
+}
+
+_LEAF_TYPES = {
+    "int": (int,),
+    "number": (int, float),
+    "str": (str,),
+    "bool": (bool,),
+}
+
+
+def check(value, spec, path, errors):
+    if isinstance(spec, str):
+        types = _LEAF_TYPES[spec]
+        # bool is an int subclass — don't let True satisfy "int"/"number"
+        if isinstance(value, bool) and spec != "bool":
+            errors.append(f"{path}: expected {spec}, got bool")
+        elif not isinstance(value, types):
+            errors.append(
+                f"{path}: expected {spec}, got {type(value).__name__}")
+    elif isinstance(spec, dict):
+        if not isinstance(value, dict):
+            errors.append(f"{path}: expected object, got "
+                          f"{type(value).__name__}")
+            return
+        for key, sub in spec.items():
+            optional = isinstance(sub, tuple) and sub[0] == "optional"
+            if key not in value or (optional and value[key] is None):
+                if not optional:
+                    errors.append(f"{path}.{key}: required field missing")
+                continue
+            check(value[key], sub[1] if optional else sub,
+                  f"{path}.{key}", errors)
+    elif isinstance(spec, tuple) and spec[0] == "list":
+        if not isinstance(value, list):
+            errors.append(f"{path}: expected list, got "
+                          f"{type(value).__name__}")
+            return
+        if not value:
+            errors.append(f"{path}: list is empty")
+        for i, item in enumerate(value):
+            check(item, spec[1], f"{path}[{i}]", errors)
+    elif isinstance(spec, tuple) and spec[0] == "optional":
+        check(value, spec[1], path, errors)
+    else:  # pragma: no cover - schema author error
+        raise ValueError(f"bad spec at {path}: {spec!r}")
+
+
+def main() -> int:
+    files = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
+    if not files:
+        print("check_bench_schema: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    failed = False
+    for f in files:
+        name = os.path.basename(f)
+        if name not in SCHEMAS:
+            print(f"FAIL {name}: no schema registered — add one to "
+                  f"scripts/check_bench_schema.py")
+            failed = True
+            continue
+        with open(f) as fh:
+            try:
+                payload = json.load(fh)
+            except json.JSONDecodeError as e:
+                print(f"FAIL {name}: invalid JSON ({e})")
+                failed = True
+                continue
+        errors: list = []
+        check(payload, SCHEMAS[name], name, errors)
+        if errors:
+            failed = True
+            print(f"FAIL {name}:")
+            for e in errors:
+                print(f"    {e}")
+        else:
+            print(f"OK   {name}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -129,6 +129,11 @@ class TrainerConfig:
     variant: str = "intent"
     c_push: float = 0.0
     c_fetch: float = 0.0
+    # §5 per-tensor gating: each parameter tensor pushes/fetches
+    # independently, driven by its own v̄ moving average (per-leaf eq. 9);
+    # staleness is then tracked per tensor (client_leaf_ts).
+    per_tensor_push: bool = False
+    per_tensor_fetch: bool = False
     drop_policy: str = "local_apply"   # 'local_apply' | 'discard'
     stats_dtype: str = "float32"       # bfloat16 for the >100B dry-runs
     use_fused_kernel: bool = False     # batched Pallas apply (engine/fused)

@@ -22,13 +22,21 @@ from repro.core.rules import (
     get_rule,
     registered_rules,
 )
-from repro.core.bandwidth import BandwidthConfig, transmit_prob, should_transmit
+from repro.core.bandwidth import (
+    BandwidthConfig,
+    masked_bytes,
+    per_tensor_transmit_mask,
+    should_transmit,
+    transmit_prob,
+    tree_bytes,
+)
 from repro.core.engine import (
     Counters,
     apply_gated,
     count_events,
     fused_apply,
     init_counters,
+    per_tensor_gate,
     serial_apply,
     transmit_gate,
 )

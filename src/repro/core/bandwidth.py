@@ -30,19 +30,30 @@ class BandwidthConfig:
     #              paper's choice; needs a [λ, P] gradient cache).
     #  'skip'    — no server update happens for this opportunity.
     drop_policy: str = "cache"
-    # Per-tensor fetch gating (the paper's §5 future-work proposal):
-    # each parameter TENSOR is refreshed independently with probability
-    # 1/(1 + c_fetch/(v_leaf + eps)), v_leaf = that tensor's mean
-    # gradient-std MA — tensors whose statistics indicate higher staleness
-    # risk sync more often; bandwidth is spent where it matters.
+    # Per-tensor gating (the paper's §5 future-work proposal): each parameter
+    # TENSOR transmits independently with probability
+    # 1/(1 + c/(v̄_leaf + eps)), v̄_leaf = that tensor's mean gradient-std
+    # MA — tensors whose statistics indicate higher staleness risk sync more
+    # often; bandwidth is spent where it matters.  `per_tensor_fetch` gates
+    # which tensors of the canonical parameters a client refreshes;
+    # `per_tensor_push` mirrors eq. 9 on the push side: which tensors of a
+    # client's gradient reach the server (dropped leaves follow
+    # `drop_policy` leaf-wise: 'cache' re-applies that leaf's most recent
+    # transmitted gradient, 'skip' freezes that leaf's server state).
     per_tensor_fetch: bool = False
+    per_tensor_push: bool = False
 
     def __post_init__(self):
         assert self.drop_policy in ("cache", "skip")
 
     @property
     def enabled(self) -> bool:
-        return self.c_push > 0 or self.c_fetch > 0 or self.per_tensor_fetch
+        return (self.c_push > 0 or self.c_fetch > 0
+                or self.per_tensor_fetch or self.per_tensor_push)
+
+    @property
+    def per_tensor(self) -> bool:
+        return self.per_tensor_fetch or self.per_tensor_push
 
 
 def transmit_prob(vbar, c, eps: float = 1e-8):
@@ -57,10 +68,24 @@ def should_transmit(key, vbar, c, eps: float = 1e-8):
     return r < transmit_prob(vbar, c, eps)
 
 
-def per_tensor_fetch_mask(key, v_tree, c, eps: float = 1e-8):
-    """§5 extension: one independent eq.-9 draw per parameter tensor.
+def tree_bytes(tree) -> float:
+    """Wire size of one full copy of `tree` (python float, trace-constant)."""
+    return float(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree)))
 
-    Returns (mask_tree of scalar bools, transmitted_bytes, total_bytes)."""
+
+def leaf_vbar(leaf):
+    """One tensor's v̄: the mean of its gradient-std moving average."""
+    return jnp.mean(leaf.astype(jnp.float32))
+
+
+def per_tensor_transmit_mask(key, v_tree, c, eps: float = 1e-8):
+    """§5 extension: one independent eq.-9 draw per parameter tensor, driven
+    by that tensor's own v̄ (`leaf_vbar`).  Shared by the push and fetch
+    directions; event batches `jax.vmap` this over per-event keys (which
+    keeps the draws bitwise identical to the serial path's).
+
+    Returns (mask_tree of scalar bool leaves, transmitted_bytes,
+    total_bytes)."""
     leaves = jax.tree.leaves(v_tree)
     treedef = jax.tree.structure(v_tree)
     keys = jax.random.split(key, len(leaves))
@@ -68,10 +93,25 @@ def per_tensor_fetch_mask(key, v_tree, c, eps: float = 1e-8):
     sent = jnp.zeros((), jnp.float32)
     total = 0.0
     for k, l in zip(keys, leaves):
-        vb = jnp.mean(l.astype(jnp.float32))
-        m = jax.random.uniform(k) < transmit_prob(vb, c, eps)
+        m = jax.random.uniform(k) < transmit_prob(leaf_vbar(l), c, eps)
         masks.append(m)
         nbytes = float(l.size * l.dtype.itemsize)
         sent = sent + m.astype(jnp.float32) * nbytes
         total += nbytes
     return jax.tree.unflatten(treedef, masks), sent, total
+
+
+def per_tensor_fetch_mask(key, v_tree, c, eps: float = 1e-8):
+    """Scalar-event alias of `per_tensor_transmit_mask` (fetch direction)."""
+    return per_tensor_transmit_mask(key, v_tree, c, eps)
+
+
+def masked_bytes(mask_tree, like_tree):
+    """Transmitted bytes for per-leaf transmit decisions: Σ_leaf
+    count(mask_leaf)·nbytes(leaf).  Mask leaves may be scalars or [K] event
+    vectors; `like_tree` supplies each tensor's wire size."""
+    sent = jnp.zeros((), jnp.float32)
+    for m, l in zip(jax.tree.leaves(mask_tree), jax.tree.leaves(like_tree)):
+        sent = sent + (jnp.sum(m.astype(jnp.float32))
+                       * float(l.size * l.dtype.itemsize))
+    return sent

@@ -32,8 +32,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+import functools
+
 from repro.core import rules as server_rules
-from repro.core.bandwidth import transmit_prob
+from repro.core.bandwidth import per_tensor_transmit_mask, transmit_prob
 from repro.core.rules import ServerConfig, ServerState
 
 
@@ -68,12 +70,44 @@ def tree_stack(tree, n):
         lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), tree)
 
 
+def is_per_leaf(x, like) -> bool:
+    """True iff `x` is a pytree of per-leaf values mirroring `like` (as
+    opposed to one shared scalar/array for the whole tree)."""
+    return jax.tree.structure(x) == jax.tree.structure(like)
+
+
+def tree_select(mask_tree, a, b):
+    """Leaf-aligned select: `mask_tree` mirrors `a`/`b`, leaves broadcast."""
+    return jax.tree.map(lambda m, x, y: jnp.where(m, x, y), mask_tree, a, b)
+
+
+def tree_select_axis(mask_tree, a, b):
+    """Per-leaf per-row select: each mask leaf is [K] over the leading axis
+    of the matching `a`/`b` leaf."""
+    return jax.tree.map(
+        lambda m, x, y: jnp.where(
+            m.reshape((-1,) + (1,) * (x.ndim - 1)), x, y),
+        mask_tree, a, b)
+
+
+def any_leaf(mask_tree):
+    """OR-reduce a per-leaf bool pytree to one shared mask (scalar or [K])."""
+    return functools.reduce(jnp.logical_or, jax.tree.leaves(mask_tree))
+
+
 # ---------------------------------------------------------------------------
 # counters — opportunity / transmission bookkeeping (FRED §3, EXPERIMENTS §Perf)
 # ---------------------------------------------------------------------------
 
 class Counters(NamedTuple):
     """Push/fetch opportunity accounting shared by FRED and the round trainer.
+
+    Event counts (`*_potential` / `*_actual`) count transmit opportunities;
+    byte counters carry the per-leaf resolution: a pushed byte is one byte of
+    a gradient tensor that actually reached the server, a fetched byte one
+    byte of a canonical parameter tensor that actually reached a client.
+    Scalar gating accounts whole-copy bytes; per-tensor gating accounts each
+    tensor independently.
 
     No jnp defaults here on purpose: NamedTuple defaults are evaluated at
     module import, which would stage device ops before the caller configures
@@ -83,7 +117,9 @@ class Counters(NamedTuple):
     push_actual: jnp.ndarray
     fetch_potential: jnp.ndarray
     fetch_actual: jnp.ndarray
-    # per-tensor mode: byte-resolution accounting (floats)
+    # byte-resolution accounting (floats; per-leaf in per-tensor mode)
+    push_bytes_sent: jnp.ndarray
+    push_bytes_total: jnp.ndarray
     fetch_bytes_sent: jnp.ndarray
     fetch_bytes_total: jnp.ndarray
 
@@ -91,11 +127,18 @@ class Counters(NamedTuple):
 def init_counters() -> Counters:
     zero = jnp.zeros((), jnp.int32)
     zf = jnp.zeros((), jnp.float32)
-    return Counters(zero, zero, zero, zero, zf, zf)
+    return Counters(zero, zero, zero, zero, zf, zf, zf, zf)
+
+
+def _acc_bytes(prev, amount):
+    if amount is None:
+        return prev
+    return prev + jnp.asarray(amount, jnp.float32)
 
 
 def count_events(counters: Counters, push, fetch,
-                 bytes_sent=None, bytes_total=None) -> Counters:
+                 push_bytes_sent=None, push_bytes_total=None,
+                 fetch_bytes_sent=None, fetch_bytes_total=None) -> Counters:
     """Fold one batch of events in: `push`/`fetch` are bool scalars or [K]."""
     push = jnp.atleast_1d(push)
     fetch = jnp.atleast_1d(fetch)
@@ -104,12 +147,13 @@ def count_events(counters: Counters, push, fetch,
         push_actual=counters.push_actual + jnp.sum(push.astype(jnp.int32)),
         fetch_potential=counters.fetch_potential + jnp.int32(fetch.size),
         fetch_actual=counters.fetch_actual + jnp.sum(fetch.astype(jnp.int32)),
-        fetch_bytes_sent=counters.fetch_bytes_sent
-        + (bytes_sent if bytes_sent is not None
-           else jnp.zeros((), jnp.float32)),
-        fetch_bytes_total=counters.fetch_bytes_total
-        + (jnp.float32(bytes_total) if bytes_total is not None
-           else jnp.zeros((), jnp.float32)),
+        push_bytes_sent=_acc_bytes(counters.push_bytes_sent, push_bytes_sent),
+        push_bytes_total=_acc_bytes(counters.push_bytes_total,
+                                    push_bytes_total),
+        fetch_bytes_sent=_acc_bytes(counters.fetch_bytes_sent,
+                                    fetch_bytes_sent),
+        fetch_bytes_total=_acc_bytes(counters.fetch_bytes_total,
+                                     fetch_bytes_total),
     )
 
 
@@ -127,28 +171,90 @@ def transmit_gate(key, server: ServerState, c, eps, shape=()):
         server_rules.vbar(server), c, eps)
 
 
+def per_tensor_gate(key, server: ServerState, c, eps):
+    """Per-leaf eq.-9 draws, one per parameter tensor, driven by that
+    tensor's own v̄ moving average (§5 extension, both directions).
+
+    Returns (mask_tree mirroring server.params with scalar bool leaves,
+    transmitted_bytes, total_bytes); event batches `jax.vmap` this over
+    per-event keys.  As with `transmit_gate`, `c = 0` gives probability
+    exactly 1 for every leaf while still consuming the same RNG, so turning
+    gating off does not perturb any other stream.
+    """
+    return per_tensor_transmit_mask(key, server.v, c, eps)
+
+
 # ---------------------------------------------------------------------------
 # gated application — one event
 # ---------------------------------------------------------------------------
+
+def _merge_extra(extra_old, extra_new, push, like, any_push):
+    """Per-leaf merge of rule-private `ServerState.extra`: entries that
+    mirror the params tree (gap's ĝ EMA) follow the per-leaf mask; anything
+    else (scalars, buffers) takes the updated value iff any leaf pushed."""
+    if extra_old is None:
+        return extra_new
+    if isinstance(extra_old, dict):
+        like_def = jax.tree.structure(like)
+        return {
+            k: (tree_select(push, extra_new[k], sub)
+                if jax.tree.structure(sub) == like_def
+                else tree_where(any_push, extra_new[k], sub))
+            for k, sub in extra_old.items()
+        }
+    return tree_where(any_push, extra_new, extra_old)
+
+
+def merge_gated_state(old: ServerState, cand: ServerState,
+                      push) -> ServerState:
+    """Per-leaf 'skip' semantics: keep the candidate update only for pushed
+    leaves.  Parameters and the FASGD statistics (which mirror the params
+    tree leaf-for-leaf) revert per leaf; T advances iff any leaf pushed
+    (one server update happened, even if partial).
+
+    Not meaningful for synchronous (barrier) rules: their pending-sum /
+    count invariant cannot survive leaves reverting independently — the
+    configs (SimConfig / build_round_step) reject that combination."""
+    any_push = jnp.any(jnp.stack(jax.tree.leaves(
+        jax.tree.map(jnp.any, push))))
+    return ServerState(
+        params=tree_select(push, cand.params, old.params),
+        timestamp=jnp.where(any_push, cand.timestamp, old.timestamp),
+        n=tree_select(push, cand.n, old.n),
+        b=tree_select(push, cand.b, old.b),
+        v=tree_select(push, cand.v, old.v),
+        extra=_merge_extra(old.extra, cand.extra, push, old.params, any_push),
+    )
+
 
 def apply_gated(scfg: ServerConfig, server: ServerState, grad, push, grad_ts,
                 *, client_params=None, cached_grad=None):
     """One server application under a push decision.
 
+    `push` is either one bool for the whole gradient or a per-leaf bool
+    pytree mirroring the params tree (§5 per-tensor push gating — each
+    tensor of the gradient transmits independently).
+
     cached_grad is not None  → the paper's 'cache' drop policy: a dropped
-      push re-applies that client's most recent transmitted gradient, so the
-      server still moves and T still advances.
+      push re-applies that client's most recent transmitted gradient (per
+      leaf, in per-tensor mode), so the server still moves and T still
+      advances.
     cached_grad is None      → 'skip' (or no gating): a dropped push masks
-      the entire update out.
+      the update out — whole-state for a scalar decision, leaf-wise for a
+      per-leaf one (T then advances iff any leaf transmitted).
 
     Returns (new_server, aux).
     """
+    per_leaf = is_per_leaf(push, server.params)
     if cached_grad is not None:
-        g_eff = tree_where(push, grad, cached_grad)
+        g_eff = (tree_select(push, grad, cached_grad) if per_leaf
+                 else tree_where(push, grad, cached_grad))
         return server_rules.apply_update(
             scfg, server, g_eff, grad_ts, client_params=client_params)
     cand, aux = server_rules.apply_update(
         scfg, server, grad, grad_ts, client_params=client_params)
+    if per_leaf:
+        return merge_gated_state(server, cand, push), aux
     return tree_where(push, cand, server), aux
 
 
@@ -160,7 +266,10 @@ def serial_apply(scfg: ServerConfig, server: ServerState, grads, push,
                  grad_ts, client_params=None):
     """Apply pushed gradients one at a time in event order (lock = order).
 
-    `grads` leaves are [K, ...]; `push`/`grad_ts` are [K];
+    `grads` leaves are [K, ...]; `push`/`grad_ts` are [K] — or per-leaf
+    pytrees mirroring the params tree with [K] leaves (per-tensor push
+    gating / per-tensor staleness; `lax.scan` slices each leaf, so the body
+    sees per-event per-leaf scalars and `apply_gated` resolves them);
     `client_params` (optional, [K, ...]) feeds gap-aware rules.
     Returns (server, taus [K]).
     """
@@ -195,23 +304,70 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
     rule that declares `batched_pallas_mode`, the per-leaf reduction over
     the client axis runs in one Pallas pass (`kernels/batched_update.py`).
 
-    Returns (server, taus [K]).
+    Per-tensor mode (§5 extension): `push` may be a per-leaf bool pytree
+    mirroring the params tree with [K] leaves (per-tensor push gating —
+    each gradient tensor is masked independently; T advances by the number
+    of events that pushed *any* leaf), and `client_ts` may be a per-leaf
+    int32 pytree with [K] leaves (per-tensor staleness — each tensor's τ is
+    measured from its own last synchronization; the per-leaf τ reaches the
+    batched Pallas kernel as that leaf's SMEM τ vector).
+
+    Returns (server, taus [K] — the per-event staleness, averaged over
+    leaves in per-tensor mode).
     """
     rule = server_rules.get_rule(scfg.rule)
     if not rule.supports_fused:
         raise ValueError(
             f"rule {scfg.rule!r} does not support the fused apply mode")
-    n_push = jnp.sum(push.astype(jnp.int32))
-    pushf = push.astype(jnp.float32)
-    mean_g = jax.tree.map(
-        lambda g: jnp.einsum("c,c...->...", pushf, g) / jnp.maximum(n_push, 1),
-        grads,
-    )
-    has_push = n_push > 0
-    stats_state = rule.update_stats(scfg, server, mean_g)
-    server = tree_where(has_push, stats_state, server)
+    per_leaf_push = is_per_leaf(push, server.params)
+    per_leaf_ts = is_per_leaf(client_ts, server.params)
 
-    taus = server_rules.step_staleness(server.timestamp, client_ts)  # [K]
+    if per_leaf_push:
+        pushf = jax.tree.map(lambda m: m.astype(jnp.float32), push)
+        # an event is a server update iff it transmitted at least one leaf
+        n_push = jnp.sum(any_leaf(push).astype(jnp.int32))
+        n_push_leaf = jax.tree.map(
+            lambda m: jnp.sum(m.astype(jnp.int32)), pushf)
+        mean_g = jax.tree.map(
+            lambda m, g, n: jnp.einsum("c,c...->...", m, g)
+            / jnp.maximum(n, 1),
+            pushf, grads, n_push_leaf)
+        stats_state = rule.update_stats(scfg, server, mean_g)
+        has_push_leaf = jax.tree.map(lambda n: n > 0, n_push_leaf)
+        any_push = n_push > 0
+        server = server._replace(
+            n=tree_select(has_push_leaf, stats_state.n, server.n),
+            b=tree_select(has_push_leaf, stats_state.b, server.b),
+            v=tree_select(has_push_leaf, stats_state.v, server.v),
+            extra=_merge_extra(server.extra, stats_state.extra,
+                               has_push_leaf, server.params, any_push),
+        )
+    else:
+        n_push = jnp.sum(push.astype(jnp.int32))
+        pushf = push.astype(jnp.float32)
+        mean_g = jax.tree.map(
+            lambda g: jnp.einsum("c,c...->...", pushf, g)
+            / jnp.maximum(n_push, 1),
+            grads,
+        )
+        has_push = n_push > 0
+        stats_state = rule.update_stats(scfg, server, mean_g)
+        server = tree_where(has_push, stats_state, server)
+
+    if per_leaf_ts:
+        taus_tree = jax.tree.map(
+            lambda ts: server_rules.step_staleness(server.timestamp, ts),
+            client_ts)                                       # leaves [K]
+        taus = server_rules.mean_leaf_tau(taus_tree)          # [K] diagnostic
+    else:
+        taus_tree = None
+        taus = server_rules.step_staleness(server.timestamp, client_ts)  # [K]
+
+    n_leaves = len(jax.tree.leaves(server.params))
+    t_leaves = (jax.tree.leaves(taus_tree) if per_leaf_ts
+                else [taus] * n_leaves)
+    m_leaves = (jax.tree.leaves(pushf) if per_leaf_push
+                else [pushf] * n_leaves)
 
     gap = None
     if rule.needs_client_params and client_params is not None:
@@ -221,23 +377,32 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
             - cp.astype(jnp.float32),
             server.params, client_params)
 
+    treedef = jax.tree.structure(server.params)
     if (scfg.use_fused_kernel and rule.batched_pallas_mode is not None
             and gap is None):
         from repro.kernels.ops import batched_scale_apply
-        coeffs = (rule.fused_coeffs(scfg, taus) * pushf
-                  if rule.batched_pallas_mode == "coeff" else pushf)
+        if rule.batched_pallas_mode == "coeff":
+            coeffs = jax.tree.unflatten(
+                treedef, [rule.fused_coeffs(scfg, t) for t in t_leaves])
+        else:
+            coeffs = jax.tree.unflatten(
+                treedef, [jnp.ones_like(t) for t in t_leaves])
+        masks = jax.tree.unflatten(treedef, m_leaves)
+        taus_arg = jax.tree.unflatten(treedef, t_leaves)
         new_params = batched_scale_apply(
-            server.params, grads, server.v, coeffs, taus,
-            lr=scfg.lr, eps=scfg.eps, mode=rule.batched_pallas_mode)
+            server.params, grads, server.v, coeffs, taus_arg,
+            masks=masks, lr=scfg.lr, eps=scfg.eps,
+            mode=rule.batched_pallas_mode)
     elif rule.batched_pallas_mode == "coeff" and gap is None:
         # v-independent scale: the delta is a plain weighted sum over the
         # event axis — one contraction per leaf, no [K, *s] scale tensor.
-        w = rule.fused_coeffs(scfg, taus) * pushf
-        new_params = jax.tree.map(
-            lambda p, g: p - jnp.einsum("k,k...->...", w, g),
-            server.params, grads)
+        g_leaves = jax.tree.leaves(grads)
+        new = [p - jnp.einsum("k,k...->...",
+                              rule.fused_coeffs(scfg, t) * m, g)
+               for p, g, t, m in zip(jax.tree.leaves(server.params),
+                                     g_leaves, t_leaves, m_leaves)]
+        new_params = jax.tree.unflatten(treedef, new)
     else:
-        treedef = jax.tree.structure(server.v)
         v_leaves = jax.tree.leaves(server.v)
         g_leaves = jax.tree.leaves(grads)
         gap_leaves = (jax.tree.leaves(gap) if gap is not None
@@ -245,13 +410,14 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
         e_leaves = server_rules.extra_leaf_dicts(server.extra, server.v)
 
         deltas = []
-        for v_leaf, g_leaf, e_leaf, gap_leaf in zip(
-                v_leaves, g_leaves, e_leaves, gap_leaves):
+        for v_leaf, g_leaf, e_leaf, gap_leaf, t_leaf, m_leaf in zip(
+                v_leaves, g_leaves, e_leaves, gap_leaves, t_leaves,
+                m_leaves):
             expand = (-1,) + (1,) * v_leaf.ndim
             scale = rule.scale_leaf(
-                scfg, v_leaf[None], taus.reshape(expand),
+                scfg, v_leaf[None], t_leaf.reshape(expand),
                 extra=e_leaf, gap=gap_leaf)
-            m = pushf.reshape(expand)
+            m = m_leaf.reshape(expand)
             deltas.append(jnp.sum(m * scale * g_leaf, axis=0))
         delta = jax.tree.unflatten(treedef, deltas)
         new_params = jax.tree.map(jnp.subtract, server.params, delta)
@@ -289,10 +455,20 @@ def last_event_scatter(tree, clients, values, eligible, num_slots):
     """Scatter per-event `values` ([K, ...] leaves) into per-client `tree`
     ([λ, ...] leaves) with deterministic last-eligible-event-wins semantics.
 
+    `eligible` is one [K] mask shared by every leaf, or a per-leaf pytree of
+    [K] masks mirroring `tree` (per-tensor push gating: each leaf of the
+    gradient cache only advances where *that* leaf transmitted).
+
     Losing/ineligible events are redirected to the out-of-bounds index
     `num_slots` and dropped by the scatter, so the surviving indices are
     unique — O(K) rows touched, never a fleet-sized copy.
     """
+    if is_per_leaf(eligible, tree):
+        def one(l, v, e):
+            win = last_event_winners(clients, e)
+            idx = jnp.where(win, clients, num_slots)
+            return l.at[idx].set(v, mode="drop")
+        return jax.tree.map(one, tree, values, eligible)
     win = last_event_winners(clients, eligible)
     idx = jnp.where(win, clients, num_slots)
     return jax.tree.map(

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.configs.base import TrainerConfig
 from repro.core import engine
 from repro.core import rules as server_rules
+from repro.core.bandwidth import masked_bytes, tree_bytes
 from repro.core.engine import Counters
 from repro.core.rules import ServerConfig, ServerState
 
@@ -55,6 +56,9 @@ class RoundState(NamedTuple):
     client_ts: jnp.ndarray      # [C] int32
     round_idx: jnp.ndarray      # int32
     counters: Counters          # shared engine bookkeeping (as in FRED)
+    # per-tensor gating (§5): [C, n_leaves] int32 — the timestamp at which
+    # each TENSOR of each client group's copy last synchronized.
+    client_leaf_ts: Any = None
 
 
 def server_config(tc: TrainerConfig) -> ServerConfig:
@@ -68,12 +72,16 @@ def server_config(tc: TrainerConfig) -> ServerConfig:
 
 def init_round_state(tc: TrainerConfig, params) -> RoundState:
     scfg = server_config(tc)
+    n_leaves = len(jax.tree.leaves(params))
     return RoundState(
         server=server_rules.init(scfg, params),
         client_params=engine.tree_stack(params, tc.num_round_clients),
         client_ts=jnp.zeros((tc.num_round_clients,), jnp.int32),
         round_idx=jnp.zeros((), jnp.int32),
         counters=engine.init_counters(),
+        client_leaf_ts=(
+            jnp.zeros((tc.num_round_clients, n_leaves), jnp.int32)
+            if tc.per_tensor_fetch else None),
     )
 
 
@@ -88,56 +96,110 @@ def build_round_step(
     """
     assert apply_mode in ("serial", "fused"), apply_mode
     scfg = server_config(tc)
+    # same restriction as SimConfig: a partially-transmitted gradient has no
+    # coherent meaning at a synchronous round barrier (see fred.SimConfig)
+    assert not (tc.per_tensor_push
+                and server_rules.get_rule(tc.rule).synchronous), \
+        f"per_tensor_push is undefined for synchronous rule {tc.rule!r}"
 
     def round_step(state: RoundState, batch, key):
         k_push, k_fetch = jax.random.split(key)
         C = tc.num_round_clients
+        model_bytes = tree_bytes(state.server.params)
 
         losses, grads = jax.vmap(grad_fn)(state.client_params, batch)
 
-        push = (
-            engine.transmit_gate(k_push, state.server, tc.c_push, tc.eps, (C,))
-            if tc.c_push > 0 else jnp.ones((C,), bool)
-        )
+        # --- push gates (eq. 9; per-leaf eq. 9 in per-tensor mode) ---
+        if tc.per_tensor_push:
+            push = jax.vmap(lambda k: engine.per_tensor_gate(
+                k, state.server, tc.c_push, tc.eps)[0]
+            )(jax.random.split(k_push, C))                   # leaves [C]
+            push_event = engine.any_leaf(push)               # [C]
+            push_sent = masked_bytes(push, state.server.params)
+        else:
+            push = push_event = (
+                engine.transmit_gate(k_push, state.server, tc.c_push,
+                                     tc.eps, (C,))
+                if tc.c_push > 0 else jnp.ones((C,), bool)
+            )
+            push_sent = jnp.sum(push.astype(jnp.float32)) * model_bytes
+
+        grad_ts = state.client_ts
+        if tc.per_tensor_fetch:
+            # per-tensor staleness: each tensor's τ from its own last sync
+            treedef = jax.tree.structure(state.server.params)
+            grad_ts = jax.tree.unflatten(
+                treedef, [state.client_leaf_ts[:, i]
+                          for i in range(state.client_leaf_ts.shape[1])])
 
         if apply_mode == "serial":
             server, taus = engine.serial_apply(
-                scfg, state.server, grads, push, state.client_ts,
+                scfg, state.server, grads, push, grad_ts,
                 state.client_params)
         else:
             server, taus = engine.fused_apply(
-                scfg, state.server, grads, push, state.client_ts,
+                scfg, state.server, grads, push, grad_ts,
                 state.client_params)
 
-        fetch = (
-            engine.transmit_gate(k_fetch, server, tc.c_fetch, tc.eps, (C,))
-            if tc.c_fetch > 0 else jnp.ones((C,), bool)
-        )
+        # --- fetch gates ---
+        if tc.per_tensor_fetch:
+            fmask = jax.vmap(lambda k: engine.per_tensor_gate(
+                k, server, tc.c_fetch, tc.eps)[0]
+            )(jax.random.split(k_fetch, C))                  # leaves [C]
+            fetch = jnp.stack(jax.tree.leaves(fmask)).all(axis=0)  # [C]
+            fetch_sent = masked_bytes(fmask, server.params)
+        else:
+            fmask = None
+            fetch = (
+                engine.transmit_gate(k_fetch, server, tc.c_fetch, tc.eps, (C,))
+                if tc.c_fetch > 0 else jnp.ones((C,), bool)
+            )
+            fetch_sent = jnp.sum(fetch.astype(jnp.float32)) * model_bytes
 
         # --- client-side parameter refresh ---
-        def upd_leaf(cp, sp, g):
+        def upd_leaf(cp, sp, g, p, f):
             exp = (-1,) + (1,) * (cp.ndim - 1)
-            f = fetch.reshape(exp)
-            p = push.reshape(exp)
+            f = f.reshape(exp)
+            p = p.reshape(exp)
             local = cp - tc.lr * g if tc.drop_policy == "local_apply" else cp
             kept = jnp.where(p, cp, local)       # un-pushed grad applied locally
             return jnp.where(f, sp[None], kept)  # fetched clients get canonical
 
-        client_params = jax.tree.map(upd_leaf, state.client_params, server.params, grads)
+        p_leaves = (jax.tree.leaves(push) if tc.per_tensor_push
+                    else [push] * len(jax.tree.leaves(grads)))
+        f_leaves = (jax.tree.leaves(fmask) if tc.per_tensor_fetch
+                    else [fetch] * len(jax.tree.leaves(grads)))
+        treedef = jax.tree.structure(server.params)
+        client_params = jax.tree.unflatten(treedef, [
+            upd_leaf(cp, sp, g, p, f)
+            for cp, sp, g, p, f in zip(
+                jax.tree.leaves(state.client_params),
+                jax.tree.leaves(server.params),
+                jax.tree.leaves(grads), p_leaves, f_leaves)])
         client_ts = jnp.where(fetch, server.timestamp, state.client_ts)
+        client_leaf_ts = state.client_leaf_ts
+        if tc.per_tensor_fetch:
+            client_leaf_ts = jnp.stack(
+                [jnp.where(m, server.timestamp, state.client_leaf_ts[:, i])
+                 for i, m in enumerate(jax.tree.leaves(fmask))], axis=1)
 
         new_state = RoundState(
             server=server,
             client_params=client_params,
             client_ts=client_ts,
             round_idx=state.round_idx + 1,
-            counters=engine.count_events(state.counters, push, fetch),
+            counters=engine.count_events(
+                state.counters, push_event, fetch,
+                push_bytes_sent=push_sent, push_bytes_total=C * model_bytes,
+                fetch_bytes_sent=fetch_sent,
+                fetch_bytes_total=C * model_bytes),
+            client_leaf_ts=client_leaf_ts,
         )
         metrics = {
             "loss": jnp.mean(losses),
             "loss_per_client": losses,
             "mean_tau": jnp.mean(taus),
-            "pushes": jnp.sum(push.astype(jnp.int32)),
+            "pushes": jnp.sum(push_event.astype(jnp.int32)),
             "fetches": jnp.sum(fetch.astype(jnp.int32)),
             "timestamp": server.timestamp,
         }

@@ -206,6 +206,14 @@ def effective_scale(config: ServerConfig, state: ServerState, tau, gap=None):
     return jax.tree.unflatten(treedef, scales)
 
 
+def mean_leaf_tau(tau_tree):
+    """Collapse a per-leaf staleness pytree to one diagnostic τ (the mean
+    over leaves — leaves may be scalars or [K] event vectors)."""
+    leaves = jax.tree.leaves(tau_tree)
+    return sum(jnp.asarray(t, jnp.float32) for t in leaves) / max(
+        len(leaves), 1)
+
+
 def _mean_scale(scale) -> jnp.ndarray:
     # NB: the count is a python float — >2B-param models overflow an i32
     # literal if it is staged as an int.
@@ -481,8 +489,7 @@ def apply_update(config: ServerConfig, state: ServerState, grad,
         # per-tensor timestamps (§5 extension)
         tau = jax.tree.map(
             lambda ts: step_staleness(state.timestamp, ts), grad_timestamp)
-        tau_scalar = sum(jnp.mean(t) for t in jax.tree.leaves(tau)) / max(
-            len(jax.tree.leaves(tau)), 1)
+        tau_scalar = mean_leaf_tau(tau)
     else:
         tau = tau_scalar = step_staleness(state.timestamp, grad_timestamp)
     return rule.apply(config, state, grad, tau, tau_scalar,

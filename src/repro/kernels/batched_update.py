@@ -14,12 +14,18 @@ Two scale families cover every kernelizable registry rule
 (`UpdateRule.batched_pallas_mode`):
 
  - ``mode='coeff'``: scale is a per-event *scalar* c_k (asgd / sasgd / exp /
-   poly — anything v-independent).  The push mask is folded into c_k.
+   poly — anything v-independent).
  - ``mode='fasgd'``: scale = lr / (v·τ_k + eps) elementwise in the std MA v
-   (paper eq. 7); the mask arrives as c_k ∈ {0, 1}.
+   (paper eq. 7).
+
+The push decision arrives as its own SMEM mask vector m_k ∈ {0, 1},
+separate from the rule coefficient — with per-tensor push gating (§5
+extension) each parameter leaf launches with *its* mask and *its* τ vector,
+so per-leaf gating and per-leaf staleness are just different SMEM contents,
+never a recompile or an extra HBM pass.
 
 Layout follows `fasgd_update.py`: (rows, 128) lane-aligned tiles, gradients
-stacked [K, rows, 128]; per-event scalars (c_k, τ_k) live in SMEM so a
+stacked [K, rows, 128]; per-event scalars (m_k, c_k, τ_k) live in SMEM so a
 different event batch does not recompile.
 """
 from __future__ import annotations
@@ -34,8 +40,8 @@ import jax.experimental.pallas.tpu as pltpu
 LANES = 128
 
 
-def _kernel(scal_ref, coeff_ref, tau_ref, p_ref, v_ref, g_ref, po_ref,
-            *, num_events: int, mode: str, eps: float):
+def _kernel(scal_ref, mask_ref, coeff_ref, tau_ref, p_ref, v_ref, g_ref,
+            po_ref, *, num_events: int, mode: str, eps: float):
     lr = scal_ref[0]
     block_shape = p_ref.shape
     v = v_ref[...] if mode == "fasgd" else None
@@ -44,8 +50,8 @@ def _kernel(scal_ref, coeff_ref, tau_ref, p_ref, v_ref, g_ref, po_ref,
         g = g_ref[k].astype(jnp.float32)
         if mode == "fasgd":
             scale = lr / (v * tau_ref[k] + eps)            # eq. 7, per event
-            return acc + coeff_ref[k] * scale * g
-        return acc + coeff_ref[k] * g
+            return acc + mask_ref[k] * coeff_ref[k] * scale * g
+        return acc + mask_ref[k] * coeff_ref[k] * g
 
     acc = jax.lax.fori_loop(
         0, num_events, body, jnp.zeros(block_shape, jnp.float32))
@@ -56,21 +62,25 @@ def batched_scale_apply_2d(
     params: jax.Array,   # (R, 128) — any float dtype
     grads: jax.Array,    # (K, R, 128)
     v: jax.Array,        # (R, 128) float32 (read only in mode='fasgd')
-    coeffs: jax.Array,   # (K,) float32 — per-event scalar (mask folded in)
-    taus: jax.Array,     # (K,) float32
+    coeffs: jax.Array,   # (K,) float32 — per-event rule coefficient
+    taus: jax.Array,     # (K,) float32 — this leaf's per-event staleness
     lr,
     *,
+    masks: jax.Array = None,   # (K,) float32 ∈ {0,1} — this leaf's push mask
     eps: float = 1e-8,
     mode: str = "fasgd",
     block_rows: int = 256,
     interpret: bool = False,
 ):
-    """One fused Σ_k c_k·scale(v,τ_k)·g_k apply over tile-aligned buffers."""
+    """One fused Σ_k m_k·c_k·scale(v,τ_k)·g_k apply over tile-aligned
+    buffers.  `masks=None` means every event pushed this leaf."""
     assert mode in ("coeff", "fasgd"), mode
     K, R, lanes = grads.shape
     assert lanes == LANES and params.shape == (R, LANES), (grads.shape,
                                                            params.shape)
     assert R % block_rows == 0, (R, block_rows)
+    if masks is None:
+        masks = jnp.ones((K,), jnp.float32)
     grid = (R // block_rows,)
     tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
     gtile = pl.BlockSpec((K, block_rows, LANES), lambda i: (0, i, 0))
@@ -81,6 +91,7 @@ def batched_scale_apply_2d(
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),  # (lr,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # masks [K]
             pl.BlockSpec(memory_space=pltpu.SMEM),  # coeffs [K]
             pl.BlockSpec(memory_space=pltpu.SMEM),  # taus [K]
             tile, tile, gtile,
@@ -88,5 +99,5 @@ def batched_scale_apply_2d(
         out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((R, LANES), params.dtype),
         interpret=interpret,
-    )(scalars, coeffs.astype(jnp.float32), taus.astype(jnp.float32),
-      params, v, grads)
+    )(scalars, masks.astype(jnp.float32), coeffs.astype(jnp.float32),
+      taus.astype(jnp.float32), params, v, grads)

@@ -70,13 +70,17 @@ def fasgd_update(params: Any, grads: Any, n: Any, b: Any, v: Any, lr, tau,
 
 
 def batched_scale_apply(params: Any, grads: Any, v: Any, coeffs, taus,
-                        *, lr, eps=1e-8, mode="fasgd",
+                        *, masks=None, lr, eps=1e-8, mode="fasgd",
                         block_rows: int = 256,
                         interpret: bool | None = None):
-    """Fused Σ_k m_k·scale(v,τ_k)·g_k parameter update over arbitrary pytrees.
+    """Fused Σ_k m_k·c_k·scale(v,τ_k)·g_k parameter update over arbitrary
+    pytrees.
 
     `grads` leaves carry a leading [K] event axis over the matching `params`
-    / `v` leaves; `coeffs`/`taus` are [K] per-event scalars.  Semantically
+    / `v` leaves; `coeffs`/`taus`/`masks` are [K] per-event vectors — either
+    one shared vector for the whole tree, or per-leaf pytrees mirroring
+    `params` (per-tensor push gating / per-tensor staleness: each leaf's
+    kernel launch gets its own SMEM mask and τ vector).  Semantically
     identical to the engine's generic per-leaf scale_leaf reduction for
     rules with `batched_pallas_mode` ('coeff' or 'fasgd'); one HBM pass per
     leaf instead of K+1 broadcast intermediates.
@@ -87,7 +91,21 @@ def batched_scale_apply(params: Any, grads: Any, v: Any, coeffs, taus,
     rows_budget = max(8, (4 << 20) // (LANES * 4 * max(K, 1)))
     block = min(block_rows, 1 << (rows_budget.bit_length() - 1))
 
-    def one(p, g, vv):
+    params_def = jax.tree.structure(params)
+
+    def per_leaf(x, fill):
+        """Broadcast a shared [K] vector (or None) to one entry per leaf."""
+        if x is None:
+            x = fill
+        if jax.tree.structure(x) == params_def:
+            return jax.tree.leaves(x)
+        return [x] * params_def.num_leaves
+
+    coeff_leaves = per_leaf(coeffs, None)
+    tau_leaves = per_leaf(taus, None)
+    mask_leaves = per_leaf(masks, jnp.ones((K,), jnp.float32))
+
+    def one(p, g, vv, coeff, tau, mask):
         shape, dtype = p.shape, p.dtype
         (p2, _), (v2, _) = _pad_to_tiles(p, block), _pad_to_tiles(vv, block)
         gflat = g.reshape(K, -1)
@@ -97,11 +115,14 @@ def batched_scale_apply(params: Any, grads: Any, v: Any, coeffs, taus,
         g2 = gflat.reshape(K, -1, LANES)
         rows = min(block, p2.shape[0])
         po = _bk.batched_scale_apply_2d(
-            p2, g2, v2, coeffs, taus, lr, eps=eps, mode=mode,
+            p2, g2, v2, coeff, tau, lr, masks=mask, eps=eps, mode=mode,
             block_rows=rows, interpret=interpret)
         return po.reshape(-1)[:p.size].reshape(shape).astype(dtype)
 
-    return jax.tree.map(one, params, grads, v)
+    outs = [one(p, g, vv, c, t, m) for p, g, vv, c, t, m in zip(
+        jax.tree.leaves(params), jax.tree.leaves(grads), jax.tree.leaves(v),
+        coeff_leaves, tau_leaves, mask_leaves)]
+    return jax.tree.unflatten(params_def, outs)
 
 
 def attention(q, k, v, *, causal=True, window=0, sm_scale=None,

@@ -56,6 +56,9 @@ def main():
     ap.add_argument("--apply-mode", default="serial", choices=["serial", "fused"])
     ap.add_argument("--c-push", type=float, default=0.0)
     ap.add_argument("--c-fetch", type=float, default=0.0)
+    ap.add_argument("--per-tensor", action="store_true",
+                    help="gate each parameter tensor independently on both "
+                         "directions (per-leaf eq. 9 + per-tensor staleness)")
     ap.add_argument("--variant", default="intent", choices=["intent", "literal"])
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -67,6 +70,7 @@ def main():
     tc = TrainerConfig(
         num_round_clients=max(args.clients, 1), rule=args.rule, lr=args.lr,
         c_push=args.c_push, c_fetch=args.c_fetch, variant=args.variant,
+        per_tensor_push=args.per_tensor, per_tensor_fetch=args.per_tensor,
         seed=args.seed,
     )
     mesh = make_host_mesh(data=len(jax.devices()))
@@ -109,6 +113,14 @@ def main():
         dt = time.time() - t0
         print(f"[train] done: {args.steps - start} rounds in {dt:.1f}s "
               f"({(args.steps - start) / max(dt, 1e-9):.2f} rounds/s)")
+        cnt = state.counters
+        sent = float(cnt.push_bytes_sent + cnt.fetch_bytes_sent)
+        total = float(cnt.push_bytes_total + cnt.fetch_bytes_total)
+        if total > 0:
+            print(f"[train] bandwidth: {sent / 2**20:.1f} MiB sent of "
+                  f"{total / 2**20:.1f} MiB potential "
+                  f"({sent / total:.1%} transmitted, "
+                  f"{total / max(sent, 1e-9):.1f}x reduction)")
     else:
         scfg = server_config(tc)
         state = server_rules.init(scfg, params)

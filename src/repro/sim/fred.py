@@ -48,7 +48,7 @@ import jax.numpy as jnp
 
 from repro.core import engine
 from repro.core import rules as server_rules
-from repro.core.bandwidth import BandwidthConfig, per_tensor_fetch_mask
+from repro.core.bandwidth import BandwidthConfig, masked_bytes, tree_bytes
 from repro.core.engine import (
     Counters,
     tree_index,
@@ -82,11 +82,16 @@ class SimConfig:
             # A synchronous barrier only makes sense with a fair schedule.
             assert self.dispatcher == "roundrobin", \
                 f"{self.server.rule} requires roundrobin"
+            # Per-leaf push masks would desync the barrier's pending-sum /
+            # count invariant (leaves revert independently while the scalar
+            # count advances) — a partially-transmitted gradient has no
+            # coherent meaning at a round barrier.
+            assert not self.bandwidth.per_tensor_push, \
+                f"per_tensor_push is undefined for synchronous rule " \
+                f"{self.server.rule!r}"
         if self.apply_mode == "fused":
             assert rule.supports_fused, \
                 f"rule {self.server.rule!r} does not support apply_mode='fused'"
-            assert not self.bandwidth.per_tensor_fetch, \
-                "per_tensor_fetch requires apply_mode='serial'"
 
 
 class SimState(NamedTuple):
@@ -97,7 +102,8 @@ class SimState(NamedTuple):
     rr_pos: jnp.ndarray           # int32, round-robin cursor
     counters: Counters
     # per-tensor fetch mode (§5 extension): [λ, n_leaves] int32 — the
-    # timestamp at which each TENSOR of each client's copy last synchronized.
+    # timestamp at which each TENSOR of each client's copy last synchronized
+    # (maintained by both apply modes; per-leaf τ in serial AND fused).
     client_leaf_ts: Optional[jnp.ndarray] = None
 
 
@@ -187,6 +193,7 @@ def build_step_fn(
         """One client event — the paper's protocol, verbatim."""
         k_disp, k_batch, k_push, k_fetch = jax.random.split(key, 4)
         c = _dispatch(config, state.rr_pos, k_disp, het_logits)
+        model_bytes = tree_bytes(state.server.params)
 
         # --- client computes a stochastic gradient on its (stale) params ---
         idx = jax.random.randint(k_batch, (config.batch_size,), 0, data_x.shape[0])
@@ -194,8 +201,18 @@ def build_step_fn(
         p_c = tree_index(state.client_params, c)
         loss, g = grad_fn(p_c, xb, yb)
 
-        # --- push gate (B-FASGD eq. 9) ---
-        push = engine.transmit_gate(k_push, state.server, bw.c_push, bw.eps)
+        # --- push gate (B-FASGD eq. 9; per-leaf in per-tensor mode) ---
+        if bw.per_tensor_push:
+            # §5 extension, push side: each gradient tensor transmits
+            # independently, gated by its own v̄ moving average.
+            push, push_sent, push_total = engine.per_tensor_gate(
+                k_push, state.server, bw.c_push, bw.eps)
+            push_event = engine.any_leaf(push)
+        else:
+            push = push_event = engine.transmit_gate(
+                k_push, state.server, bw.c_push, bw.eps)
+            push_sent = push.astype(jnp.float32) * model_bytes
+            push_total = model_bytes
 
         if bw.per_tensor_fetch:
             # per-tensor timestamps → per-leaf staleness in the update rule
@@ -214,16 +231,25 @@ def build_step_fn(
             client_params=p_c, cached_grad=cached)
         grad_cache = state.grad_cache
         if grad_cache is not None:
-            grad_cache = jax.tree.map(
-                lambda cache, gv: cache.at[c].set(jnp.where(push, gv, cache[c])),
-                grad_cache, g)
+            if bw.per_tensor_push:
+                # per-leaf cache: a leaf only becomes "most recent
+                # transmitted" if that leaf actually crossed the wire
+                grad_cache = jax.tree.map(
+                    lambda cache, gv, m: cache.at[c].set(
+                        jnp.where(m, gv, cache[c])),
+                    grad_cache, g, push)
+            else:
+                grad_cache = jax.tree.map(
+                    lambda cache, gv: cache.at[c].set(
+                        jnp.where(push, gv, cache[c])),
+                    grad_cache, g)
 
         # --- fetch gate ---
         if bw.per_tensor_fetch:
             # paper §5 extension: each tensor synchronizes independently,
             # gated by its own gradient-std statistics.
-            mask, sent, total = per_tensor_fetch_mask(
-                k_fetch, new_server.v, bw.c_fetch, bw.eps)
+            mask, fetch_sent, fetch_total = engine.per_tensor_gate(
+                k_fetch, new_server, bw.c_fetch, bw.eps)
             new_p_c = jax.tree.map(
                 lambda m, sp, cp: jnp.where(m, sp, cp),
                 mask, new_server.params, p_c)
@@ -234,7 +260,8 @@ def build_step_fn(
             client_leaf_ts = state.client_leaf_ts.at[c].set(new_leaf_ts)
         else:
             fetch = engine.transmit_gate(k_fetch, new_server, bw.c_fetch, bw.eps)
-            sent = total = None
+            fetch_sent = fetch.astype(jnp.float32) * model_bytes
+            fetch_total = model_bytes
             client_leaf_ts = state.client_leaf_ts
             new_p_c = tree_where(fetch, new_server.params, p_c)
         client_params = tree_set(state.client_params, c, new_p_c)
@@ -254,7 +281,9 @@ def build_step_fn(
             client_ts = jnp.where(applied, new_server.timestamp, client_ts)
 
         counters = engine.count_events(
-            state.counters, push, fetch, bytes_sent=sent, bytes_total=total)
+            state.counters, push_event, fetch,
+            push_bytes_sent=push_sent, push_bytes_total=push_total,
+            fetch_bytes_sent=fetch_sent, fetch_bytes_total=fetch_total)
 
         new_state = SimState(
             server=new_server,
@@ -269,7 +298,7 @@ def build_step_fn(
             "loss": loss,
             "tau": aux["tau"],
             "client": c,
-            "pushed": push,
+            "pushed": push_event,
             "fetched": fetch,
         }
         return new_state, metrics
@@ -294,6 +323,7 @@ def build_step_fn(
         ks = jax.vmap(lambda k: jax.random.split(k, 4))(keys)    # [K, 4, ...]
         k_disp, k_batch = ks[:, 0], ks[:, 1]
         k_push, k_fetch = ks[:, 2], ks[:, 3]
+        model_bytes = tree_bytes(state.server.params)
 
         # --- dispatch K events (λ-vectorized) ---
         if config.dispatcher == "roundrobin":
@@ -313,15 +343,36 @@ def build_step_fn(
         losses, grads = vgrad(p_e, xb, yb)
 
         # --- push gates (pre-window server state, like the serial path) ---
-        push = engine.transmit_gate(
-            k_push[0], state.server, bw.c_push, bw.eps, shape=(K,))
-        grad_ts = state.client_ts[cs]                            # [K]
+        if bw.per_tensor_push:
+            # per-event keys (vmap) so the K=1 draws match serial bitwise
+            push = jax.vmap(lambda k: engine.per_tensor_gate(
+                k, state.server, bw.c_push, bw.eps)[0])(k_push)  # leaves [K]
+            push_event = engine.any_leaf(push)                   # [K]
+            push_sent = masked_bytes(push, state.server.params)
+        else:
+            push = push_event = engine.transmit_gate(
+                k_push[0], state.server, bw.c_push, bw.eps, shape=(K,))
+            push_sent = jnp.sum(push.astype(jnp.float32)) * model_bytes
+        push_total = K * model_bytes
+
+        if bw.per_tensor_fetch:
+            # per-tensor staleness: each tensor's τ measured from its own
+            # last synchronization (client_leaf_ts lifted into fused mode)
+            leaf_ts = state.client_leaf_ts[cs]               # [K, n_leaves]
+            treedef = jax.tree.structure(state.server.params)
+            grad_ts = jax.tree.unflatten(
+                treedef, [leaf_ts[:, i] for i in range(leaf_ts.shape[1])])
+        else:
+            grad_ts = state.client_ts[cs]                        # [K]
 
         if state.grad_cache is not None:
-            # cache policy: every opportunity applies *some* gradient, so the
-            # fused mask is all-ones over the effective gradients.
-            g_eff = tree_where_axis(
-                push, grads, tree_index(state.grad_cache, cs))
+            # cache policy: every opportunity applies *some* gradient (per
+            # leaf, in per-tensor mode), so the fused mask is all-ones over
+            # the effective gradients.
+            cache_e = tree_index(state.grad_cache, cs)
+            g_eff = (engine.tree_select_axis(push, grads, cache_e)
+                     if bw.per_tensor_push
+                     else tree_where_axis(push, grads, cache_e))
             new_server, taus = engine.fused_apply(
                 scfg, state.server, g_eff, jnp.ones((K,), bool), grad_ts,
                 client_params=p_e)
@@ -334,20 +385,47 @@ def build_step_fn(
             grad_cache = None
 
         # --- fetch gates (post-apply server state) ---
-        fetch = engine.transmit_gate(
-            k_fetch[0], new_server, bw.c_fetch, bw.eps, shape=(K,))
         # Every fetch delivers the same canonical parameters, so duplicate
-        # clients in the batch all write identical rows — the scatter is
-        # deterministic and touches K rows, never the full λ fleet.
-        fetch_idx = jnp.where(fetch, cs, lam)          # dropped when ¬fetch
-        client_params = jax.tree.map(
-            lambda cp, sp: cp.at[fetch_idx].set(
-                jnp.broadcast_to(sp[None], (K,) + sp.shape), mode="drop"),
-            state.client_params, new_server.params)
+        # clients in the batch all write identical rows — the scatters are
+        # deterministic and touch K rows, never the full λ fleet.
+        if bw.per_tensor_fetch:
+            fmask = jax.vmap(lambda k: engine.per_tensor_gate(
+                k, new_server, bw.c_fetch, bw.eps)[0])(k_fetch)  # leaves [K]
+            fetch = jnp.stack(jax.tree.leaves(fmask)).all(axis=0)  # [K]
+            fetch_sent = masked_bytes(fmask, new_server.params)
+
+            def fetch_leaf(m, cp, sp):
+                i = jnp.where(m, cs, lam)            # dropped when ¬fetched
+                return cp.at[i].set(
+                    jnp.broadcast_to(sp[None], (K,) + sp.shape), mode="drop")
+            client_params = jax.tree.map(
+                fetch_leaf, fmask, state.client_params, new_server.params)
+            leaf_cols = []
+            for i, m in enumerate(jax.tree.leaves(fmask)):
+                rows = jnp.where(m, cs, lam)
+                leaf_cols.append(
+                    state.client_leaf_ts[:, i].at[rows].set(
+                        jnp.broadcast_to(new_server.timestamp, (K,)),
+                        mode="drop"))
+            client_leaf_ts = jnp.stack(leaf_cols, axis=1)
+        else:
+            fetch = engine.transmit_gate(
+                k_fetch[0], new_server, bw.c_fetch, bw.eps, shape=(K,))
+            fetch_sent = jnp.sum(fetch.astype(jnp.float32)) * model_bytes
+            idx = jnp.where(fetch, cs, lam)            # dropped when ¬fetch
+            client_params = jax.tree.map(
+                lambda cp, sp: cp.at[idx].set(
+                    jnp.broadcast_to(sp[None], (K,) + sp.shape), mode="drop"),
+                state.client_params, new_server.params)
+            client_leaf_ts = state.client_leaf_ts
+        fetch_idx = jnp.where(fetch, cs, lam)
         client_ts = state.client_ts.at[fetch_idx].set(
             jnp.broadcast_to(new_server.timestamp, (K,)), mode="drop")
 
-        counters = engine.count_events(state.counters, push, fetch)
+        counters = engine.count_events(
+            state.counters, push_event, fetch,
+            push_bytes_sent=push_sent, push_bytes_total=push_total,
+            fetch_bytes_sent=fetch_sent, fetch_bytes_total=K * model_bytes)
 
         new_state = SimState(
             server=new_server,
@@ -356,13 +434,13 @@ def build_step_fn(
             grad_cache=grad_cache,
             rr_pos=state.rr_pos + K,
             counters=counters,
-            client_leaf_ts=state.client_leaf_ts,
+            client_leaf_ts=client_leaf_ts,
         )
         metrics = {
             "loss": losses,
             "tau": taus,
             "client": cs,
-            "pushed": push,
+            "pushed": push_event,
             "fetched": fetch,
         }
         return new_state, metrics

@@ -149,12 +149,14 @@ def test_fused_gating_cache_advances_t_skip_freezes(setup):
     assert skip["final_timestamp"] == skip["counters"]["push_actual"] < 64
 
 
-def test_fused_rejects_unsupported_configs(setup):
+def test_rejects_unsupported_configs(setup):
     with pytest.raises(AssertionError, match="fused"):
         _cfg("ssgd", apply_mode="fused")
-    with pytest.raises(AssertionError, match="per_tensor"):
-        _cfg("fasgd", apply_mode="fused",
-             bandwidth=BandwidthConfig(per_tensor_fetch=True))
+    # a partially-transmitted gradient is undefined at a round barrier
+    with pytest.raises(AssertionError, match="per_tensor_push"):
+        _cfg("ssgd", bandwidth=BandwidthConfig(per_tensor_push=True))
+    # per-tensor gating in fused mode is exercised (not just constructed)
+    # by tests/test_per_tensor.py::test_fused_k1_matches_serial_per_tensor
 
 
 def test_batched_kernel_matches_generic_fused(setup):

@@ -1,15 +1,27 @@
 """Per-tensor B-FASGD (the paper's §5 future-work proposal, implemented):
-per-tensor fetch gating + per-leaf step-staleness in the update rules."""
+per-tensor push+fetch gating + per-leaf step-staleness in the update rules,
+in both apply modes (serial and fused with client_leaf_ts)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core import engine
 from repro.core import rules
-from repro.core.bandwidth import BandwidthConfig, per_tensor_fetch_mask
+from repro.core.bandwidth import (
+    BandwidthConfig,
+    per_tensor_fetch_mask,
+    per_tensor_transmit_mask,
+)
 from repro.core.rules import ServerConfig
 from repro.sim.fred import SimConfig, run_simulation
 
-from conftest import tree_allclose
+from conftest import tree_allclose, tree_equal
+
+ALL_RULES = rules.registered_rules()
+FUSED_RULES = tuple(r for r in ALL_RULES if rules.get_rule(r).supports_fused)
 
 
 def test_per_tensor_mask_direction():
@@ -88,3 +100,213 @@ def test_per_tensor_mode_deterministic(mlp_setup):
             for _ in range(2)]
     assert runs[0]["val_cost"] == runs[1]["val_cost"]
     assert runs[0]["counters"] == runs[1]["counters"]
+
+
+# ---------------------------------------------------------------------------
+# per-tensor PUSH gating (§5 mirrored on the push side) + fused client_leaf_ts
+# ---------------------------------------------------------------------------
+
+def _run(cfg, setup, steps=48):
+    params, ds, loss = setup
+    return run_simulation(
+        cfg, loss, params, ds.x_train, ds.y_train, steps, eval_every=steps,
+        eval_fn=lambda p: loss(p, ds.x_valid, ds.y_valid))
+
+
+def _cfg(rule, **kw):
+    disp = ("roundrobin" if rules.get_rule(rule).synchronous
+            else kw.pop("dispatcher", "uniform"))
+    return SimConfig(
+        num_clients=kw.pop("num_clients", 4), batch_size=8, dispatcher=disp,
+        seed=kw.pop("seed", 3),
+        server=ServerConfig(rule=rule, lr=0.01, num_clients=4,
+                            **kw.pop("server_kwargs", {})),
+        **kw)
+
+
+def test_vmapped_per_tensor_mask_direction_and_bytes():
+    """The production event-batch pattern: vmap per_tensor_transmit_mask
+    over per-event keys.  Per-leaf [K] masks come out leaf-aligned, the
+    high-variance leaf transmits (nearly) always, the low one (nearly)
+    never, and masked_bytes accounts each leaf per event."""
+    from repro.core.bandwidth import masked_bytes
+    v = {"hot": jnp.full((4,), 10.0), "cold": jnp.full((4,), 1e-4)}
+    keys = jax.random.split(jax.random.PRNGKey(0), 256)
+    mask = jax.vmap(
+        lambda k: per_tensor_transmit_mask(k, v, 0.05)[0])(keys)
+    assert mask["hot"].shape == (256,) and mask["cold"].shape == (256,)
+    assert int(jnp.sum(mask["hot"])) > 250
+    assert int(jnp.sum(mask["cold"])) < 6
+    expect = 16.0 * (int(jnp.sum(mask["hot"])) + int(jnp.sum(mask["cold"])))
+    assert float(masked_bytes(mask, v)) == expect
+
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_per_tensor_gating_off_is_rng_invariant(setup_rule_cache, rule):
+    """c=0 per-tensor draws still consume only the dedicated gate keys, so
+    the trajectory is *bitwise* identical to the ungated run — per rule."""
+    base, per_tensor = setup_rule_cache[rule]
+    assert tree_equal(base["state"].server.params,
+                      per_tensor["state"].server.params), rule
+    assert base["final_timestamp"] == per_tensor["final_timestamp"]
+    c_b, c_p = base["counters"], per_tensor["counters"]
+    for k in ("push_actual", "fetch_actual", "push_bytes_sent",
+              "fetch_bytes_sent"):
+        assert c_b[k] == c_p[k], (rule, k)
+
+
+@pytest.fixture(scope="module")
+def setup_rule_cache(mlp_setup):
+    """Ungated vs per-tensor-gated-with-c=0 runs for every rule (one jit
+    each; shared across the parametrized RNG-invariance asserts).
+    Synchronous rules reject per_tensor_push, so they cover the fetch
+    direction only."""
+    out = {}
+    for rule in ALL_RULES:
+        per_tensor_push = not rules.get_rule(rule).synchronous
+        base = _run(_cfg(rule), mlp_setup)
+        pt = _run(_cfg(rule, bandwidth=BandwidthConfig(
+            per_tensor_push=per_tensor_push, per_tensor_fetch=True)),
+            mlp_setup)
+        out[rule] = (base, pt)
+    return out
+
+
+def test_per_tensor_push_cache_vs_skip(mlp_setup):
+    """'cache' re-applies dropped leaves from the per-leaf gradient cache
+    (T advances every event); 'skip' freezes un-pushed leaves (T advances
+    only on events that pushed any leaf)."""
+    kw = dict(num_clients=4, seed=7)
+    cache = _run(_cfg("fasgd", bandwidth=BandwidthConfig(
+        c_push=1.0, per_tensor_push=True, drop_policy="cache"), **kw),
+        mlp_setup, steps=64)
+    skip = _run(_cfg("fasgd", bandwidth=BandwidthConfig(
+        c_push=1.0, per_tensor_push=True, drop_policy="skip"), **kw),
+        mlp_setup, steps=64)
+    assert cache["final_timestamp"] == 64
+    assert skip["final_timestamp"] < 64
+    for r in (cache, skip):
+        c = r["counters"]
+        assert 0 < c["push_bytes_sent"] < c["push_bytes_total"]
+        assert np.isfinite(r["val_cost"][-1])
+
+
+def test_per_tensor_push_masks_leave_unpushed_leaves_frozen():
+    """engine.apply_gated with a per-leaf mask and 'skip': exactly the
+    pushed leaves move (params AND their stats); T advances."""
+    cfg = ServerConfig(rule="fasgd", lr=0.1)
+    params = {"a": jnp.zeros((4,)), "b": jnp.zeros((4,))}
+    st = rules.init(cfg, params)._replace(timestamp=jnp.int32(5))
+    g = {"a": jnp.ones((4,)), "b": jnp.ones((4,))}
+    push = {"a": jnp.bool_(True), "b": jnp.bool_(False)}
+    new, aux = engine.apply_gated(cfg, st, g, push, jnp.int32(4))
+    assert (np.asarray(new.params["a"]) != 0).all()
+    assert (np.asarray(new.params["b"]) == 0).all()
+    assert (np.asarray(new.n["a"]) != 0).all()       # stats moved with leaf
+    assert (np.asarray(new.n["b"]) == 0).all()       # frozen leaf stats too
+    assert int(new.timestamp) == 6
+    # all-dropped: nothing moves, T frozen
+    none_pushed = {"a": jnp.bool_(False), "b": jnp.bool_(False)}
+    same, _ = engine.apply_gated(cfg, st, g, none_pushed, jnp.int32(4))
+    assert tree_equal(same.params, st.params)
+    assert int(same.timestamp) == 5
+
+
+@pytest.mark.parametrize("rule", FUSED_RULES)
+def test_fused_k1_matches_serial_per_tensor(mlp_setup, rule):
+    """apply_mode='fused' with client_leaf_ts (per-tensor push+fetch, skip
+    policy) must be allclose-equivalent to serial at K=1 for every
+    fused-capable registry rule — per-event gate keys make the RNG streams
+    identical."""
+    bw = BandwidthConfig(c_push=0.5, c_fetch=0.5, per_tensor_push=True,
+                         per_tensor_fetch=True, drop_policy="skip")
+    serial = _run(_cfg(rule, bandwidth=bw), mlp_setup)
+    fused = _run(_cfg(rule, bandwidth=bw, apply_mode="fused"), mlp_setup)
+    assert tree_allclose(serial["state"].server.params,
+                         fused["state"].server.params, rtol=1e-4), rule
+    assert serial["final_timestamp"] == fused["final_timestamp"]
+    assert serial["counters"] == fused["counters"]
+    assert tree_equal(serial["state"].client_leaf_ts,
+                      fused["state"].client_leaf_ts)
+
+
+def test_fused_k1_matches_serial_per_tensor_cache(mlp_setup):
+    """Same equivalence under the 'cache' drop policy (per-leaf gradient
+    cache + all-ones fused mask over effective gradients)."""
+    bw = BandwidthConfig(c_push=0.5, c_fetch=0.5, per_tensor_push=True,
+                         per_tensor_fetch=True, drop_policy="cache")
+    serial = _run(_cfg("fasgd", bandwidth=bw, seed=11), mlp_setup)
+    fused = _run(_cfg("fasgd", bandwidth=bw, seed=11, apply_mode="fused"),
+                 mlp_setup)
+    assert tree_allclose(serial["state"].server.params,
+                         fused["state"].server.params, rtol=1e-4)
+    assert serial["counters"] == fused["counters"]
+    assert tree_equal(serial["state"].grad_cache, fused["state"].grad_cache)
+
+
+def test_fused_event_batch_per_tensor_runs(mlp_setup):
+    """K>1 fused with per-tensor push+fetch: leaf timestamps desynchronize,
+    byte counters stay consistent, loss stays finite."""
+    cfg = _cfg("fasgd", num_clients=16, seed=5,
+               events_per_step=8, apply_mode="fused",
+               bandwidth=BandwidthConfig(c_push=0.05, c_fetch=0.1,
+                                         per_tensor_push=True,
+                                         per_tensor_fetch=True,
+                                         drop_policy="skip"))
+    r = _run(cfg, mlp_setup, steps=64)
+    c = r["counters"]
+    assert c["push_potential"] == c["fetch_potential"] == 64
+    assert 0 < c["push_bytes_sent"] < c["push_bytes_total"]
+    assert 0 < c["fetch_bytes_sent"] < c["fetch_bytes_total"]
+    leaf_ts = np.asarray(r["state"].client_leaf_ts)
+    assert (leaf_ts.max(axis=1) != leaf_ts.min(axis=1)).any()
+    assert np.isfinite(r["val_cost"][-1])
+
+
+def test_fused_kernel_matches_generic_per_tensor(mlp_setup):
+    """use_fused_kernel with per-leaf masks + per-leaf τ SMEM vectors must
+    equal the generic per-leaf reduction."""
+    cfg = _cfg("fasgd", num_clients=8, seed=5,
+               events_per_step=4, apply_mode="fused",
+               bandwidth=BandwidthConfig(c_push=0.05, c_fetch=0.1,
+                                         per_tensor_push=True,
+                                         per_tensor_fetch=True,
+                                         drop_policy="skip"))
+    kcfg = dataclasses.replace(
+        cfg, server=dataclasses.replace(cfg.server, use_fused_kernel=True))
+    r1 = _run(cfg, mlp_setup, steps=16)
+    r2 = _run(kcfg, mlp_setup, steps=16)
+    assert tree_allclose(r1["state"].server.params,
+                         r2["state"].server.params, rtol=1e-5, atol=1e-6)
+
+
+def test_round_trainer_per_tensor_gating(mlp_setup):
+    """Round trainer: per-tensor push+fetch wires through serial AND fused
+    apply with per-leaf staleness and byte accounting."""
+    from repro.configs.base import TrainerConfig
+    from repro.core.round_trainer import build_round_step, init_round_state
+    params, ds, loss = mlp_setup
+    batch = (jnp.stack([ds.x_train[:8]] * 4), jnp.stack([ds.y_train[:8]] * 4))
+    grad_fn = lambda p, b: jax.value_and_grad(loss)(p, b[0], b[1])
+    finals = {}
+    for mode in ("serial", "fused"):
+        tc = TrainerConfig(num_round_clients=4, rule="fasgd", lr=0.01,
+                           c_push=0.5, c_fetch=0.5,
+                           per_tensor_push=True, per_tensor_fetch=True)
+        st = init_round_state(tc, params)
+        step = jax.jit(build_round_step(tc, grad_fn, apply_mode=mode))
+        for i in range(4):
+            st, metrics = step(st, batch, jax.random.PRNGKey(i))
+        c = st.counters
+        assert 0 < float(c.push_bytes_sent) < float(c.push_bytes_total)
+        assert 0 < float(c.fetch_bytes_sent) < float(c.fetch_bytes_total)
+        leaf_ts = np.asarray(st.client_leaf_ts)
+        assert leaf_ts.shape == (4, len(jax.tree.leaves(params)))
+        assert np.isfinite(float(metrics["loss"]))
+        # some tensor of some client skipped a sync (that's the point)
+        assert (leaf_ts.max(axis=1) != leaf_ts.min(axis=1)).any()
+        finals[mode] = st
+    # both modes share the engine's byte accounting (same totals; sent
+    # bytes differ only through the rules' divergent v̄ trajectories)
+    assert float(finals["serial"].counters.push_bytes_total) == \
+        float(finals["fused"].counters.push_bytes_total)
