@@ -135,6 +135,21 @@ def save_root(name: str, payload) -> str:
     return path
 
 
+def save_bench(name: str, payload, results_name: str = None) -> str:
+    """The one benchmark-persistence entry point: write the tracked
+    ``BENCH_*.json`` at the repo root AND the ``benchmarks/results/`` copy
+    (the CI artifact) in a single call.
+
+    `name` must follow the ``BENCH_<short>.json`` contract; the results copy
+    is named ``<short>.json`` unless `results_name` overrides it.  Returns
+    the root path.  Every benchmark that records a trajectory file should go
+    through here instead of pairing `save_root` + `save` by hand.
+    """
+    root = save_root(name, payload)
+    save(results_name or name[len("BENCH_"):], payload)
+    return root
+
+
 def load(name: str):
     with open(os.path.join(RESULTS_DIR, name)) as f:
         return json.load(f)

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import auc, mnist_experiment, save, save_root
+from benchmarks.common import auc, mnist_experiment, save, save_bench
 
 # c is compared against the *mean gradient-std MA* v-bar (eq. 9), so the
 # useful range scales with the task's gradient magnitudes; this grid spans
@@ -126,7 +126,8 @@ def main():
     summary = summarize(rows)
     payload = {"quick": args.quick, "steps": steps, "lam": args.lam,
                "summary": summary, "rows": rows}
-    save_root("BENCH_fig3_bandwidth.json", payload)
+    # root BENCH json + the benchmarks/results/fig3.json CI artifact
+    save_bench("BENCH_fig3_bandwidth.json", payload, results_name="fig3.json")
     print("fig3 summary:", summary)
     if not args.quick:
         # The headline acceptance gate: a None reduction means NO combined

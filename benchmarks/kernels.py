@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ref import fasgd_update_ref
-from benchmarks.common import save, save_root
+from benchmarks.common import save_bench
 
 
 def hbm_model(n_params: int, dtype_bytes: int = 4):
@@ -164,8 +164,7 @@ def run(rows=1 << 14, num_events=16, iters=20, include_interpret=False):
         "batched_update": run_batched(rows, num_events, iters,
                                       include_interpret),
     }
-    save("kernels.json", out)
-    save_root("BENCH_kernels.json", out)
+    save_bench("BENCH_kernels.json", out)
     return out
 
 

@@ -68,6 +68,10 @@ def paper_claims():
         out += ["", f"**Claim (relative outperformance grows with λ): gap {trend} "
                 f"with λ on this run.**", ""]
     fig3 = _j("fig3.json")
+    if isinstance(fig3, dict):
+        # full payload written by save_bench (rows + summary); the report
+        # consumes the rows
+        fig3 = fig3.get("rows")
     if fig3 and any("bytes_sent" not in r for r in fig3):
         # rows from the pre-byte-accounting fig3_bandwidth.py — unusable
         fig3 = None

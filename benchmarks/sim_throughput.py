@@ -1,4 +1,4 @@
-"""Simulator-engine throughput: events/sec, serial K=1 vs event-batched fused.
+"""Simulator-engine throughput: serial K=1 vs the two fused event-batch paths.
 
 This is a *protocol* benchmark: it measures how fast FRED advances client
 events when the simulator — dispatch, gates, server application, fleet
@@ -7,18 +7,43 @@ paper's Fig. 2 (a small MLP task swept to large client counts).  A
 deliberately light model (784-16-10, μ=4) keeps gradient FLOPs from masking
 the engine cost being measured.
 
-Methodology: both modes run the *same* jit-compiled scan harness; the scan
-is compiled once per (mode, λ) and the reported events/sec is the best of
-several repeated invocations of the warm executable (steady-state, jit
-excluded — symmetric for both modes).  Per-mode one-time compile seconds
-are reported separately so end-to-end sweep cost can be reconstructed.
+Three arms per (rule, λ) cell:
 
-Context for the numbers: on a 2-core CPU container the fused speedup is
-bounded by memory-traffic ratio (the serial path makes ~25 parameter-sized
-passes per event, the fused path ~7, with the per-event-parameter gradient
-batch shared by both), so expect ~2.5–4.5× here; the K× regime needs an
-accelerator where the batched Pallas kernel (`kernels/batched_update.py`)
-collapses the fused apply to one HBM pass.
+* ``serial`` (K=1) — the paper-faithful one-event-at-a-time lock order;
+* ``fused --fused-mode materialized`` — `vmap(grad_fn)` materializes the
+  [K, P] per-event gradient batch and `engine.fused_apply` reduces it.  On
+  CPU this path is memory-traffic-bound: ~25 parameter-sized passes per
+  event serial vs ~7 fused, which capped the fused speedup at ~2.5–4.5×
+  regardless of K;
+* ``fused --fused-mode cotangent`` — for v-independent-coefficient rules
+  (`UpdateRule.coeffs_are_v_independent`: asgd/sasgd/exp/poly) the weighted
+  gradient sum Σ_k w_k·g_k and the stats mean gradient are vjps of the
+  batched forward with per-event cotangent weights
+  (`engine.fused_apply_cotangent`).  The [K, P] batch is never
+  materialized — the weight-grad GEMMs contract over the event axis — so
+  the old 25-vs-7 pass bound no longer applies to this arm; expect ≥1.5×
+  (typically ~2×) over the materialized fused path on the 2-core CPU CI
+  container, on top of its speedup over serial.  FASGD itself is
+  v-dependent (eq. 7, elementwise in v) and reports null for this arm; its
+  K× regime remains the accelerator path where the batched Pallas kernel
+  (`kernels/batched_update.py`) collapses the materialized reduction to one
+  HBM pass.
+
+Both fused arms first deduplicate the event batch by fetch timestamp
+(`engine.dedup_events`): clients that fetched at the same T hold
+bitwise-identical stale copies, so the stale-parameter gather goes through
+group representatives and touches one distinct fleet row per group — a
+memory-locality effect; per-event gradient/data work is unchanged (each
+event keeps its own minibatch), so dedup is numerically a no-op.  The
+default ungated configuration is collision-heavy by construction — every
+event fetches, so all K clients refreshed in one dispatch window share
+that window's T and the next window's groups are large.
+
+Methodology: all arms run the *same* jit-compiled scan harness; the scan is
+compiled once per (arm, λ) and the reported events/sec is the best of
+several repeated invocations of the warm executable (steady-state, jit
+excluded — symmetric across arms).  Per-arm one-time compile seconds are
+reported separately so end-to-end sweep cost can be reconstructed.
 
 Writes ``BENCH_sim_throughput.json`` at the repo root (and a copy under
 ``benchmarks/results/``) so the perf trajectory is tracked PR-over-PR:
@@ -29,18 +54,17 @@ Writes ``BENCH_sim_throughput.json`` at the repo root (and a copy under
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.rules import ServerConfig
+from repro.core.rules import ServerConfig, get_rule
 from repro.data.mnist import load_mnist
 from repro.models.mlp import init_mlp, nll_loss
 from repro.sim.fred import SimConfig, build_step_fn, init_sim
 
-from benchmarks.common import RESULTS_DIR, save, save_root
+from benchmarks.common import save_bench
 
 SIZES = (784, 16, 10)   # protocol benchmark model (see module docstring)
 MU = 4
@@ -48,13 +72,13 @@ K_FUSED = 128
 
 
 def measure(params, ds, *, lam, events_per_step, apply_mode, n_batches,
-            rule="fasgd", seed=0, reps=5):
+            rule="fasgd", fused_mode="materialized", seed=0, reps=5):
     """Steady-state events/sec of the warm scan + one-time compile seconds."""
     k = events_per_step
     cfg = SimConfig(
         num_clients=lam, batch_size=MU, seed=seed,
         server=ServerConfig(rule=rule, lr=0.005),
-        events_per_step=k, apply_mode=apply_mode,
+        events_per_step=k, apply_mode=apply_mode, fused_mode=fused_mode,
     )
     state = init_sim(cfg, params)
     step = build_step_fn(cfg, nll_loss, ds.x_train, ds.y_train, events=k)
@@ -81,7 +105,10 @@ def measure(params, ds, *, lam, events_per_step, apply_mode, n_batches,
     return round(best, 1), round(compile_s, 2)
 
 
-def run(lams=(4, 64, 256), rules=("fasgd", "sasgd"), quick=False, seed=0):
+def run(lams=(4, 64, 256), rules=("fasgd", "sasgd"), fused_modes=("both",),
+        quick=False, seed=0):
+    fused_modes = (("materialized", "cotangent") if "both" in fused_modes
+                   else tuple(fused_modes))
     params = init_mlp(jax.random.PRNGKey(seed), SIZES)
     ds = load_mnist(seed=seed)
     serial_batches = 256 if quick else 1024
@@ -89,28 +116,54 @@ def run(lams=(4, 64, 256), rules=("fasgd", "sasgd"), quick=False, seed=0):
     reps = 3 if quick else 5
     rows = []
     for rule in rules:
+        cot_capable = get_rule(rule).coeffs_are_v_independent
         for lam in lams:
             serial, cs = measure(
                 params, ds, lam=lam, events_per_step=1, apply_mode="serial",
                 n_batches=serial_batches, rule=rule, seed=seed, reps=reps)
-            fused, cf = measure(
-                params, ds, lam=lam, events_per_step=K_FUSED,
-                apply_mode="fused", n_batches=fused_batches, rule=rule,
-                seed=seed, reps=reps)
             row = {
                 "rule": rule,
                 "lam": lam,
                 "events_per_step": K_FUSED,
                 "serial_events_per_sec": serial,
-                "fused_events_per_sec": fused,
-                "speedup": round(fused / max(serial, 1e-9), 2),
                 "serial_compile_s": cs,
-                "fused_compile_s": cf,
+                "fused_events_per_sec": None,
+                "fused_compile_s": None,
+                "speedup": None,
+                "cotangent_events_per_sec": None,
+                "cotangent_compile_s": None,
+                "cotangent_speedup": None,
+                "cotangent_vs_materialized": None,
             }
+            if "materialized" in fused_modes:
+                fused, cf = measure(
+                    params, ds, lam=lam, events_per_step=K_FUSED,
+                    apply_mode="fused", fused_mode="materialized",
+                    n_batches=fused_batches, rule=rule, seed=seed, reps=reps)
+                row.update(
+                    fused_events_per_sec=fused, fused_compile_s=cf,
+                    speedup=round(fused / max(serial, 1e-9), 2))
+            if "cotangent" in fused_modes and cot_capable:
+                cot, cc = measure(
+                    params, ds, lam=lam, events_per_step=K_FUSED,
+                    apply_mode="fused", fused_mode="cotangent",
+                    n_batches=fused_batches, rule=rule, seed=seed, reps=reps)
+                row.update(
+                    cotangent_events_per_sec=cot, cotangent_compile_s=cc,
+                    cotangent_speedup=round(cot / max(serial, 1e-9), 2))
+                if row["fused_events_per_sec"]:
+                    row["cotangent_vs_materialized"] = round(
+                        cot / max(row["fused_events_per_sec"], 1e-9), 2)
             rows.append(row)
+
+            def fmt(v):
+                return f"{v:8.1f}" if v is not None else "       -"
             print(f"  {rule:5s} λ={lam:<5} serial(K=1)={serial:8.1f} ev/s  "
-                  f"fused(K={K_FUSED})={fused:8.1f} ev/s  "
-                  f"speedup={row['speedup']:.1f}x")
+                  f"fused/mat(K={K_FUSED})={fmt(row['fused_events_per_sec'])}"
+                  f" ev/s  fused/cot={fmt(row['cotangent_events_per_sec'])}"
+                  f" ev/s  cot/mat="
+                  + (f"{row['cotangent_vs_materialized']:.2f}x"
+                     if row["cotangent_vs_materialized"] else "-"))
     return rows
 
 
@@ -119,20 +172,27 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fewer events per measurement")
     ap.add_argument("--lams", type=int, nargs="*", default=[4, 64, 256])
+    ap.add_argument("--rules", nargs="*", default=["fasgd", "sasgd"])
+    ap.add_argument("--fused-mode", choices=["both", "materialized",
+                                             "cotangent"],
+                    default="both",
+                    help="which fused arm(s) to measure against serial")
     args = ap.parse_args()
-    rows = run(lams=tuple(args.lams), quick=args.quick)
+    rows = run(lams=tuple(args.lams), rules=tuple(args.rules),
+               fused_modes=(args.fused_mode,), quick=args.quick)
     payload = {
         "model_sizes": list(SIZES),
         "batch_size": MU,
         "methodology": "steady-state: best of repeated invocations of the "
                        "same warm jit-compiled scan; compile reported "
-                       "separately",
+                       "separately; fused arms: materialized [K,P] grads "
+                       "vs cotangent-weighted vjp (event dedup in both)",
         "quick": args.quick,
+        "fused_mode_arm": args.fused_mode,
         "rows": rows,
     }
-    path = save_root("BENCH_sim_throughput.json", payload)
-    save("sim_throughput.json", payload)
-    print(f"wrote {path} (and {os.path.join(RESULTS_DIR, 'sim_throughput.json')})")
+    path = save_bench("BENCH_sim_throughput.json", payload)
+    print(f"wrote {path} (and benchmarks/results/sim_throughput.json)")
     return 0
 
 

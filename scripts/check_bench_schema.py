@@ -45,15 +45,23 @@ SCHEMAS = {
         "batch_size": "int",
         "methodology": "str",
         "quick": "bool",
+        # which fused arm(s) were measured: 'both'|'materialized'|'cotangent'
+        "fused_mode_arm": "str",
         "rows": ("list", {
             "rule": "str",
             "lam": "int",
             "events_per_step": "int",
             "serial_events_per_sec": "number",
-            "fused_events_per_sec": "number",
-            "speedup": "number",
             "serial_compile_s": "number",
-            "fused_compile_s": "number",
+            # null when the materialized fused arm was not requested
+            "fused_events_per_sec": ("optional", "number"),
+            "fused_compile_s": ("optional", "number"),
+            "speedup": ("optional", "number"),
+            # null for v-dependent rules (fasgd) or when the arm was skipped
+            "cotangent_events_per_sec": ("optional", "number"),
+            "cotangent_compile_s": ("optional", "number"),
+            "cotangent_speedup": ("optional", "number"),
+            "cotangent_vs_materialized": ("optional", "number"),
         }),
     },
     "BENCH_kernels.json": {

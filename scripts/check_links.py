@@ -1,0 +1,77 @@
+"""Check that every relative markdown link in the docs resolves.
+
+Scans ``README.md`` and ``docs/**/*.md`` for inline markdown links
+``[text](target)`` and verifies that each *relative* target exists on disk
+(relative to the file containing the link).  External links (``http(s)://``,
+``mailto:``) and pure in-page anchors (``#...``) are skipped; a relative
+target may carry an anchor suffix, which is stripped before the existence
+check.  Badge/image links are checked the same way.
+
+No third-party deps.  Run: ``python scripts/check_links.py``
+(exit 1 on any broken link) — wired into the ``docs-check`` CI job.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# inline links/images: [text](target "optional title") — non-greedy, one line
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list:
+    """README.md plus every markdown file under docs/."""
+    files = [os.path.join(REPO_ROOT, "README.md")]
+    files += sorted(glob.glob(os.path.join(REPO_ROOT, "docs", "**", "*.md"),
+                              recursive=True))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check_file(path: str) -> list:
+    """Return a list of '(line, target)' broken-link tuples for one file."""
+    broken = []
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            for target in _LINK_RE.findall(line):
+                if target.startswith(_SKIP_PREFIXES) or target.startswith("#"):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(os.path.join(base, rel))
+                if not resolved.startswith(REPO_ROOT + os.sep):
+                    # escapes the repo (e.g. the ../../actions/ CI badge,
+                    # which only resolves on github.com) — not checkable
+                    continue
+                if not os.path.exists(resolved):
+                    broken.append((lineno, target))
+    return broken
+
+
+def main() -> int:
+    files = doc_files()
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    failed = False
+    for f in files:
+        rel_f = os.path.relpath(f, REPO_ROOT)
+        broken = check_file(f)
+        if broken:
+            failed = True
+            print(f"FAIL {rel_f}:")
+            for lineno, target in broken:
+                print(f"    line {lineno}: broken relative link -> {target}")
+        else:
+            print(f"OK   {rel_f}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

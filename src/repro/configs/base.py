@@ -137,4 +137,11 @@ class TrainerConfig:
     drop_policy: str = "local_apply"   # 'local_apply' | 'discard'
     stats_dtype: str = "float32"       # bfloat16 for the >100B dry-runs
     use_fused_kernel: bool = False     # batched Pallas apply (engine/fused)
+    # 'auto' | 'materialized' | 'cotangent': how the fused apply reduces the
+    # per-client gradients.  'cotangent' (engine.fused_apply_cotangent)
+    # needs a coeffs_are_v_independent rule, whole-copy gating,
+    # drop_policy='discard' (local_apply consumes per-client gradients the
+    # cotangent path never materializes), and an event-batched loss
+    # (build_round_step's batched_loss_fn or grad_fn.event_batched).
+    fused_mode: str = "auto"
     seed: int = 0

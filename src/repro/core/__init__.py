@@ -34,9 +34,13 @@ from repro.core.engine import (
     Counters,
     apply_gated,
     count_events,
+    dedup_events,
+    event_batched_losses,
     fused_apply,
+    fused_apply_cotangent,
     init_counters,
     per_tensor_gate,
+    resolve_event_batched_loss,
     serial_apply,
     transmit_gate,
 )

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class BandwidthConfig:
+    """Eq.-9 gating strengths + drop policy + §5 per-tensor switches."""
+
     c_push: float = 0.0
     c_fetch: float = 0.0
     eps: float = 1e-8
@@ -48,11 +50,13 @@ class BandwidthConfig:
 
     @property
     def enabled(self) -> bool:
+        """True iff any gating (either direction, any granularity) is on."""
         return (self.c_push > 0 or self.c_fetch > 0
                 or self.per_tensor_fetch or self.per_tensor_push)
 
     @property
     def per_tensor(self) -> bool:
+        """True iff any per-tensor (§5) gating direction is on."""
         return self.per_tensor_fetch or self.per_tensor_push
 
 

@@ -17,6 +17,19 @@ This module is the single source of protocol truth both now consume:
    with a single stats step on the mean pushed gradient (`fused_apply`),
    optionally routed through the batched Pallas scale-and-accumulate kernel
    (`kernels/batched_update.py`) for rules that declare support;
+ - **cotangent fused application** — for rules whose fused coefficients are
+   v-independent (`UpdateRule.coeffs_are_v_independent`: asgd/sasgd/exp/poly)
+   the weight delta Σ_k w_k·g_k and the stats mean gradient are both vjps of
+   the batched forward with per-event cotangent weights
+   (`fused_apply_cotangent`) — the [K, P] per-event weight-gradient batch is
+   never materialized (docs/ARCHITECTURE.md §"Cotangent fused path");
+ - **event dedup** — clients that fetched at the same T hold bitwise-identical
+   stale copies; `dedup_events` groups an event batch by that key so the
+   stale-copy gather reads one distinct fleet row per group (a memory-
+   locality win under heavy fetch collisions) and each group's summed
+   cotangent weight meets its shared copy inside the backward's event-axis
+   contraction.  Per-event *data* work is not deduplicated — every event
+   keeps its own minibatch, so the grouping is numerically a no-op;
  - **bookkeeping** — push/fetch opportunity `Counters` shared by both paths
    (`init_counters` / `count_events`), and the deterministic last-event-wins
    scatter used when an event batch targets duplicate clients
@@ -49,6 +62,7 @@ def tree_index(tree, i):
 
 
 def tree_set(tree, i, val):
+    """Scatter `val` leaves into row i of every leaf's leading axis."""
     return jax.tree.map(lambda l, v: l.at[i].set(v), tree, val)
 
 
@@ -125,6 +139,7 @@ class Counters(NamedTuple):
 
 
 def init_counters() -> Counters:
+    """All-zero `Counters` (see the class docstring for why not defaults)."""
     zero = jnp.zeros((), jnp.int32)
     zf = jnp.zeros((), jnp.float32)
     return Counters(zero, zero, zero, zero, zf, zf, zf, zf)
@@ -297,12 +312,16 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
                 client_ts, client_params=None):
     """One masked-sum application of all pushed gradients (beyond-paper).
 
-    Stats (n, b, v, extra) advance once with the mean pushed gradient; the
-    weight delta is Σ_c m_c·scale(v, τ_c)·g_c computed against the
-    *post-stats* statistics via the registered rule's `scale_leaf`, and T
-    advances by the number of pushes.  With `scfg.use_fused_kernel` and a
-    rule that declares `batched_pallas_mode`, the per-leaf reduction over
-    the client axis runs in one Pallas pass (`kernels/batched_update.py`).
+    `grads` leaves are [K, ...] over the matching `server.params` leaves;
+    `push`/`client_ts` are [K] (or per-leaf pytrees, below).  Stats (n, b, v,
+    extra) advance once with the mean pushed gradient iff
+    `scfg.track_stats` or the rule requires them (matching the serial
+    path's `UpdateRule.apply` contract); the weight delta is
+    Σ_c m_c·scale(v, τ_c)·g_c computed against the *post-stats* statistics
+    via the registered rule's `scale_leaf`, and T advances by the number of
+    pushes.  With `scfg.use_fused_kernel` and a rule that declares
+    `batched_pallas_mode`, the per-leaf reduction over the client axis runs
+    in one Pallas pass (`kernels/batched_update.py`).
 
     Per-tensor mode (§5 extension): `push` may be a per-leaf bool pytree
     mirroring the params tree with [K] leaves (per-tensor push gating —
@@ -321,6 +340,7 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
             f"rule {scfg.rule!r} does not support the fused apply mode")
     per_leaf_push = is_per_leaf(push, server.params)
     per_leaf_ts = is_per_leaf(client_ts, server.params)
+    track_stats = scfg.track_stats or rule.requires_stats
 
     if per_leaf_push:
         pushf = jax.tree.map(lambda m: m.astype(jnp.float32), push)
@@ -328,31 +348,33 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
         n_push = jnp.sum(any_leaf(push).astype(jnp.int32))
         n_push_leaf = jax.tree.map(
             lambda m: jnp.sum(m.astype(jnp.int32)), pushf)
-        mean_g = jax.tree.map(
-            lambda m, g, n: jnp.einsum("c,c...->...", m, g)
-            / jnp.maximum(n, 1),
-            pushf, grads, n_push_leaf)
-        stats_state = rule.update_stats(scfg, server, mean_g)
-        has_push_leaf = jax.tree.map(lambda n: n > 0, n_push_leaf)
-        any_push = n_push > 0
-        server = server._replace(
-            n=tree_select(has_push_leaf, stats_state.n, server.n),
-            b=tree_select(has_push_leaf, stats_state.b, server.b),
-            v=tree_select(has_push_leaf, stats_state.v, server.v),
-            extra=_merge_extra(server.extra, stats_state.extra,
-                               has_push_leaf, server.params, any_push),
-        )
+        if track_stats:
+            mean_g = jax.tree.map(
+                lambda m, g, n: jnp.einsum("c,c...->...", m, g)
+                / jnp.maximum(n, 1),
+                pushf, grads, n_push_leaf)
+            stats_state = rule.update_stats(scfg, server, mean_g)
+            has_push_leaf = jax.tree.map(lambda n: n > 0, n_push_leaf)
+            any_push = n_push > 0
+            server = server._replace(
+                n=tree_select(has_push_leaf, stats_state.n, server.n),
+                b=tree_select(has_push_leaf, stats_state.b, server.b),
+                v=tree_select(has_push_leaf, stats_state.v, server.v),
+                extra=_merge_extra(server.extra, stats_state.extra,
+                                   has_push_leaf, server.params, any_push),
+            )
     else:
         n_push = jnp.sum(push.astype(jnp.int32))
         pushf = push.astype(jnp.float32)
-        mean_g = jax.tree.map(
-            lambda g: jnp.einsum("c,c...->...", pushf, g)
-            / jnp.maximum(n_push, 1),
-            grads,
-        )
-        has_push = n_push > 0
-        stats_state = rule.update_stats(scfg, server, mean_g)
-        server = tree_where(has_push, stats_state, server)
+        if track_stats:
+            mean_g = jax.tree.map(
+                lambda g: jnp.einsum("c,c...->...", pushf, g)
+                / jnp.maximum(n_push, 1),
+                grads,
+            )
+            has_push = n_push > 0
+            stats_state = rule.update_stats(scfg, server, mean_g)
+            server = tree_where(has_push, stats_state, server)
 
     if per_leaf_ts:
         taus_tree = jax.tree.map(
@@ -381,18 +403,25 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
     if (scfg.use_fused_kernel and rule.batched_pallas_mode is not None
             and gap is None):
         from repro.kernels.ops import batched_scale_apply
+        taus_arg = jax.tree.unflatten(treedef, t_leaves)
         if rule.batched_pallas_mode == "coeff":
-            coeffs = jax.tree.unflatten(
-                treedef, [rule.fused_coeffs(scfg, t) for t in t_leaves])
+            # v-independent scale: fold the push mask (and any dedup count
+            # weighting the caller applied) into one per-event weight vector
+            # — a single SMEM operand per leaf launch instead of two.
+            weights = jax.tree.unflatten(
+                treedef, [rule.fused_coeffs(scfg, t) * m
+                          for t, m in zip(t_leaves, m_leaves)])
+            new_params = batched_scale_apply(
+                server.params, grads, server.v, weights, taus_arg,
+                masks=None, lr=scfg.lr, eps=scfg.eps, mode="coeff")
         else:
             coeffs = jax.tree.unflatten(
                 treedef, [jnp.ones_like(t) for t in t_leaves])
-        masks = jax.tree.unflatten(treedef, m_leaves)
-        taus_arg = jax.tree.unflatten(treedef, t_leaves)
-        new_params = batched_scale_apply(
-            server.params, grads, server.v, coeffs, taus_arg,
-            masks=masks, lr=scfg.lr, eps=scfg.eps,
-            mode=rule.batched_pallas_mode)
+            masks = jax.tree.unflatten(treedef, m_leaves)
+            new_params = batched_scale_apply(
+                server.params, grads, server.v, coeffs, taus_arg,
+                masks=masks, lr=scfg.lr, eps=scfg.eps,
+                mode=rule.batched_pallas_mode)
     elif rule.batched_pallas_mode == "coeff" and gap is None:
         # v-independent scale: the delta is a plain weighted sum over the
         # event axis — one contraction per leaf, no [K, *s] scale tensor.
@@ -425,6 +454,141 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
         params=new_params, timestamp=server.timestamp + n_push
     )
     return server, taus
+
+
+# ---------------------------------------------------------------------------
+# cotangent fused application — v-independent coefficient rules
+# ---------------------------------------------------------------------------
+
+def event_batched_losses(loss_fn):
+    """Generic event-batched loss: per-event losses [K] from shared W + δ_k.
+
+    Returns `batched(W, deltas, *batch) -> [K]` where each event's stale
+    parameters enter as p_k = W + δ_k with δ_k = stop_gradient(p_k − W)
+    (`deltas` leaves are [K, ...]), so a vjp w.r.t. W yields cotangent-
+    weighted gradient sums Σ_k w_k·g_k.
+
+    This fallback vmaps `loss_fn` over per-event effective parameters — it
+    is correct for ANY loss, but the backward of the per-event GEMMs still
+    materializes a [K, P] gradient batch before summing.  For the full
+    cotangent speedup a model should provide a shared/delta-structured form
+    whose differentiable operand is the shared W (the weight-grad GEMMs then
+    contract over the event axis) and expose it as `loss_fn.event_batched` —
+    see `repro.models.mlp.nll_loss_event_batched`.
+    """
+    def batched(W, deltas, *batch):
+        p_eff = jax.tree.map(lambda w, d: w[None] + d, W, deltas)
+        return jax.vmap(lambda p, *b: loss_fn(p, *b))(p_eff, *batch)
+    return batched
+
+
+def resolve_event_batched_loss(loss_fn, batched_loss_fn=None):
+    """The event-batched form of `loss_fn` for the cotangent fused path.
+
+    Resolution order: an explicit `batched_loss_fn`, the model-attached
+    `loss_fn.event_batched` attribute, then the generic
+    `event_batched_losses` fallback.  The result has the signature
+    `batched(W, deltas, *batch) -> [K]`.
+    """
+    if batched_loss_fn is not None:
+        return batched_loss_fn
+    attached = getattr(loss_fn, "event_batched", None)
+    if attached is not None:
+        return attached
+    return event_batched_losses(loss_fn)
+
+
+def dedup_events(ts):
+    """Group an event batch by identical fetch timestamps.
+
+    Clients that fetched at the same T hold bitwise-identical stale copies
+    (every fetch delivers the canonical parameters of that timestamp), so
+    events whose `ts` rows collide can share one stale-copy row.  `ts` is
+    the per-event [K] int32 timestamp vector, or [K, n_leaves] rows of
+    `client_leaf_ts` under per-tensor fetch (a group then requires ALL
+    leaf timestamps to match).
+
+    Returns `(rep, counts, is_rep)`: `rep[k]` is the index of the first
+    event with an identical timestamp (`rep == arange(K)` iff all
+    timestamps are distinct — dedup is then a no-op), `counts[k]` the size
+    of event k's group, `is_rep[k]` whether k is its group's
+    representative.  O(K²) boolean work, negligible next to the gradient
+    evaluation.
+    """
+    t = ts if ts.ndim == 2 else ts[:, None]
+    same = jnp.all(t[:, None, :] == t[None, :, :], axis=-1)      # [K, K]
+    rep = jnp.argmax(same, axis=1).astype(jnp.int32)             # first True
+    counts = jnp.sum(same.astype(jnp.int32), axis=1)
+    is_rep = rep == jnp.arange(t.shape[0], dtype=jnp.int32)
+    return rep, counts, is_rep
+
+
+def fused_apply_cotangent(scfg: ServerConfig, server: ServerState,
+                          event_losses, stale_params, push, client_ts):
+    """Fused application via cotangent-weighted vjps — no [K, P] grad batch.
+
+    For rules with v-independent coefficients
+    (`UpdateRule.coeffs_are_v_independent`) the fused update consumes only
+
+        Δθ = Σ_k m_k·c(τ_k)·g_k      and      ḡ = Σ_k m_k·g_k / n_push,
+
+    both linear in the per-event gradients — so both are pullbacks of the
+    batched forward with per-event cotangent weights.  `event_losses(W,
+    deltas) -> [K]` evaluates every event's loss with its stale parameters
+    expressed as p_k = W + δ_k, δ_k = stop_gradient(p_k − W) (`deltas`
+    leaves [K, ...] are built here from `stale_params`); the vjp w.r.t. W
+    then contracts the weight-gradient GEMMs over the event axis instead of
+    materializing per-event weight gradients.  The two pullbacks run as one
+    vmapped backward.  Callers may gather `stale_params` through
+    `dedup_events` representatives — numerically a no-op (same-T rows are
+    bitwise-identical; the gather just touches fewer distinct fleet rows),
+    with each group's summed cotangent weight landing on its shared copy
+    inside the backward's contraction.
+
+    `push`/`client_ts` are [K]; per-leaf pytrees are rejected (a per-leaf
+    mask or τ needs per-leaf weight vectors — that is the materialized
+    path's job).  Stats advance once with ḡ iff `scfg.track_stats` or the
+    rule requires them, exactly like `fused_apply`; T advances by the
+    number of pushes.
+
+    Returns (server, taus [K], losses [K]).
+    """
+    rule = server_rules.get_rule(scfg.rule)
+    if not (rule.supports_fused and rule.coeffs_are_v_independent):
+        raise ValueError(
+            f"rule {scfg.rule!r} does not support the cotangent fused path "
+            f"(needs supports_fused and coeffs_are_v_independent)")
+    if is_per_leaf(push, server.params) or is_per_leaf(client_ts,
+                                                      server.params):
+        raise ValueError(
+            "per-leaf push masks / timestamps require the materialized "
+            "fused path (per-leaf weights cannot ride one cotangent vector)")
+    pushf = push.astype(jnp.float32)
+    n_push = jnp.sum(push.astype(jnp.int32))
+    taus = server_rules.step_staleness(server.timestamp, client_ts)   # [K]
+    coeffs = rule.fused_coeffs(scfg, taus)                            # [K]
+
+    deltas = jax.tree.map(
+        lambda p, w: jax.lax.stop_gradient(p - w[None]),
+        stale_params, server.params)
+    losses, pullback = jax.vjp(lambda W: event_losses(W, deltas),
+                               server.params)
+    w_delta = (pushf * coeffs).astype(losses.dtype)
+    if scfg.track_stats or rule.requires_stats:
+        w_mean = (pushf / jnp.maximum(n_push, 1)).astype(losses.dtype)
+        # one vmapped backward for both weighted sums
+        both = jax.vmap(lambda ct: pullback(ct)[0])(
+            jnp.stack([w_delta, w_mean]))
+        delta = jax.tree.map(lambda l: l[0], both)
+        mean_g = jax.tree.map(lambda l: l[1], both)
+        stats_state = rule.update_stats(scfg, server, mean_g)
+        server = tree_where(n_push > 0, stats_state, server)
+    else:
+        delta = pullback(w_delta)[0]
+    new_params = jax.tree.map(jnp.subtract, server.params, delta)
+    server = server._replace(
+        params=new_params, timestamp=server.timestamp + n_push)
+    return server, taus, losses
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,8 @@ from repro.core.rules import ServerConfig, ServerState
 
 
 class RoundState(NamedTuple):
+    """Server + C divergent client copies + engine counters (leaves [C, ...])."""
+
     server: ServerState
     client_params: Any          # pytree, leaves [C, ...]
     client_ts: jnp.ndarray      # [C] int32
@@ -62,6 +64,7 @@ class RoundState(NamedTuple):
 
 
 def server_config(tc: TrainerConfig) -> ServerConfig:
+    """Project the trainer config onto the engine's `ServerConfig`."""
     return ServerConfig(
         rule=tc.rule, lr=tc.lr, gamma=tc.gamma, beta=tc.beta, eps=tc.eps,
         kappa=tc.kappa, poly_power=tc.poly_power,
@@ -71,6 +74,8 @@ def server_config(tc: TrainerConfig) -> ServerConfig:
 
 
 def init_round_state(tc: TrainerConfig, params) -> RoundState:
+    """Fresh `RoundState`: server at T = 0, C identical client copies,
+    zeroed counters (and per-tensor timestamps when configured)."""
     scfg = server_config(tc)
     n_leaves = len(jax.tree.leaves(params))
     return RoundState(
@@ -89,12 +94,27 @@ def build_round_step(
     tc: TrainerConfig,
     grad_fn: Callable,     # grad_fn(params, batch) -> (loss, grads)
     apply_mode: str = "serial",
+    batched_loss_fn: Callable = None,   # batched(W, deltas, batch) -> [C]
 ):
     """Returns round_step(state, batch, key) -> (state, metrics).
 
     `batch` leaves must have a leading [C] axis (one shard per client group).
+
+    With ``apply_mode='fused'`` and ``tc.fused_mode`` 'auto'/'cotangent' the
+    per-client gradients are reduced by the engine's cotangent path when the
+    configuration is eligible (see `TrainerConfig.fused_mode`): the weighted
+    sum Σ_c m_c·c(τ_c)·g_c and the stats mean gradient come from two
+    pullbacks of the batched forward — `batched_loss_fn(W, deltas, batch) ->
+    [C]` supplies the shared/delta form, and the [C, P] per-client gradient
+    batch is never materialized.  Alternatively a model-attached
+    `grad_fn.event_batched` is picked up; it uses the model convention
+    `batched(W, deltas, *batch)` (the same form `loss_fn.event_batched`
+    carries in FRED, e.g. `mlp.nll_loss_event_batched(W, deltas, x, y)`),
+    so `batch` must then be a tuple of the loss's data arguments.
     """
     assert apply_mode in ("serial", "fused"), apply_mode
+    assert tc.fused_mode in ("auto", "materialized", "cotangent"), \
+        tc.fused_mode
     scfg = server_config(tc)
     # same restriction as SimConfig: a partially-transmitted gradient has no
     # coherent meaning at a synchronous round barrier (see fred.SimConfig)
@@ -102,12 +122,39 @@ def build_round_step(
                 and server_rules.get_rule(tc.rule).synchronous), \
         f"per_tensor_push is undefined for synchronous rule {tc.rule!r}"
 
+    rule = server_rules.get_rule(tc.rule)
+    batched_losses = batched_loss_fn
+    if batched_losses is None:
+        attached = getattr(grad_fn, "event_batched", None)
+        if attached is not None:
+            # model convention: batched(W, deltas, x, y, ...) — adapt to
+            # this module's opaque batch argument by splatting the tuple
+            batched_losses = lambda W, deltas, batch: attached(
+                W, deltas, *batch)
+    use_cotangent = (
+        apply_mode == "fused"
+        and tc.fused_mode in ("auto", "cotangent")
+        and rule.supports_fused and rule.coeffs_are_v_independent
+        and not tc.per_tensor_push and not tc.per_tensor_fetch
+        and tc.drop_policy == "discard"
+        and not tc.use_fused_kernel
+        and batched_losses is not None)
+    if tc.fused_mode == "cotangent" and not use_cotangent:
+        raise ValueError(
+            "fused_mode='cotangent' needs apply_mode='fused', a "
+            "coeffs_are_v_independent rule, whole-copy gating, "
+            "drop_policy='discard', use_fused_kernel=False, and an "
+            "event-batched loss (batched_loss_fn or grad_fn.event_batched)")
+
     def round_step(state: RoundState, batch, key):
         k_push, k_fetch = jax.random.split(key)
         C = tc.num_round_clients
         model_bytes = tree_bytes(state.server.params)
 
-        losses, grads = jax.vmap(grad_fn)(state.client_params, batch)
+        if not use_cotangent:
+            losses, grads = jax.vmap(grad_fn)(state.client_params, batch)
+        else:
+            grads = None        # cotangent: losses come from the vjp forward
 
         # --- push gates (eq. 9; per-leaf eq. 9 in per-tensor mode) ---
         if tc.per_tensor_push:
@@ -132,7 +179,12 @@ def build_round_step(
                 treedef, [state.client_leaf_ts[:, i]
                           for i in range(state.client_leaf_ts.shape[1])])
 
-        if apply_mode == "serial":
+        if use_cotangent:
+            server, taus, losses = engine.fused_apply_cotangent(
+                scfg, state.server,
+                lambda W, deltas: batched_losses(W, deltas, batch),
+                state.client_params, push, grad_ts)
+        elif apply_mode == "serial":
             server, taus = engine.serial_apply(
                 scfg, state.server, grads, push, grad_ts,
                 state.client_params)
@@ -161,21 +213,26 @@ def build_round_step(
             exp = (-1,) + (1,) * (cp.ndim - 1)
             f = f.reshape(exp)
             p = p.reshape(exp)
+            # g is None on the cotangent path, which requires 'discard' —
+            # the un-pushed local gradient is never needed there.
             local = cp - tc.lr * g if tc.drop_policy == "local_apply" else cp
             kept = jnp.where(p, cp, local)       # un-pushed grad applied locally
             return jnp.where(f, sp[None], kept)  # fetched clients get canonical
 
+        n_leaves = len(jax.tree.leaves(server.params))
+        g_leaves = (jax.tree.leaves(grads) if grads is not None
+                    else [None] * n_leaves)
         p_leaves = (jax.tree.leaves(push) if tc.per_tensor_push
-                    else [push] * len(jax.tree.leaves(grads)))
+                    else [push] * n_leaves)
         f_leaves = (jax.tree.leaves(fmask) if tc.per_tensor_fetch
-                    else [fetch] * len(jax.tree.leaves(grads)))
+                    else [fetch] * n_leaves)
         treedef = jax.tree.structure(server.params)
         client_params = jax.tree.unflatten(treedef, [
             upd_leaf(cp, sp, g, p, f)
             for cp, sp, g, p, f in zip(
                 jax.tree.leaves(state.client_params),
                 jax.tree.leaves(server.params),
-                jax.tree.leaves(grads), p_leaves, f_leaves)])
+                g_leaves, p_leaves, f_leaves)])
         client_ts = jnp.where(fetch, server.timestamp, state.client_ts)
         client_leaf_ts = state.client_leaf_ts
         if tc.per_tensor_fetch:

@@ -67,6 +67,8 @@ def register_rule(name: str):
 
 
 def get_rule(name: str) -> "UpdateRule":
+    """Look up a registered `UpdateRule` by name (KeyError with the registry
+    listing otherwise)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -76,11 +78,14 @@ def get_rule(name: str) -> "UpdateRule":
 
 
 def registered_rules() -> Tuple[str, ...]:
+    """All registered rule names, sorted (the registry's public listing)."""
     return tuple(sorted(_REGISTRY))
 
 
 @dataclasses.dataclass(frozen=True)
 class ServerConfig:
+    """Hyper-parameters of the server update (rule + eq. 4-8 constants)."""
+
     rule: Rule = "fasgd"
     lr: float = 0.005
     gamma: float = 0.9          # MA decay for n (2nd moment) and b (1st moment)
@@ -115,6 +120,8 @@ class ServerState(NamedTuple):
 
 
 def init(config: ServerConfig, params) -> ServerState:
+    """Fresh `ServerState` for `params`: T = 0, n = b = 0, v = 1, plus the
+    rule's `init_extra_state` (leaves mirror the params pytree)."""
     rule = get_rule(config.rule)
     zeros = jax.tree.map(jnp.zeros_like, params)
     # v starts at 1 so that the first few FASGD updates are ~plain ASGD
@@ -246,19 +253,49 @@ class UpdateRule:
     #   None    — not kernelizable (gap needs per-leaf gap tensors; ssgd is
     #             a barrier).
     batched_pallas_mode: Optional[str] = None
+    # The rule's fused update consumes only Σ_k w_k·g_k with per-event scalar
+    # weights w_k = m_k·fused_coeffs(τ_k) that do NOT depend on the server
+    # statistics v (nor on the per-leaf gap).  For such rules the engine can
+    # compute the whole fused weight delta as a single vjp of the batched
+    # forward with per-event cotangent weights — without ever materializing
+    # the [K, P] per-event weight-gradient batch (engine.fused_apply_cotangent;
+    # see docs/ARCHITECTURE.md).  True for asgd / sasgd / exp / poly; False
+    # for fasgd (scale is elementwise in v, eq. 7) and gap (scale needs the
+    # per-leaf parameter gap).
+    coeffs_are_v_independent: bool = False
 
     def fused_coeffs(self, config: ServerConfig, taus):
-        """Per-event scalar effective lr [K] for `batched_pallas_mode='coeff'`."""
+        """Per-event scalar effective lr [K] for `batched_pallas_mode='coeff'`.
+
+        `taus` is a [K] float32 staleness vector (engine-computed via
+        `step_staleness`); the result multiplies each event's gradient in the
+        fused reduction Σ_k m_k·coeff_k·g_k.
+        """
         raise NotImplementedError(self.name)
 
     def init_extra_state(self, config: ServerConfig, params):
+        """Rule-private state stored in `ServerState.extra` (or None).
+
+        Entries whose pytree structure mirrors `params` are merged per leaf
+        under per-tensor gating; anything else follows the whole-update mask.
+        """
         return None
 
     def update_stats(self, config: ServerConfig, state: ServerState, grad):
+        """One statistics step (default: the shared eq. 4-6 moving averages).
+
+        `grad` mirrors the params pytree.  Override to extend
+        `ServerState.extra` with rule-private statistics (e.g. gap's ĝ EMA).
+        """
         return _shared_stats(config, state, grad)
 
     def scale_leaf(self, config: ServerConfig, v, tau, extra=None, gap=None):
-        """Per-leaf effective lr; must broadcast `v` against `tau`/`gap`."""
+        """Per-leaf effective lr; must broadcast `v` against `tau`/`gap`.
+
+        Serves both a single gradient (`v: [*s]`, scalar `tau`) and the
+        fused per-event batch (`v: [1, *s]`, `tau: [K, 1, ...]`,
+        `gap: [K, *s]`) with the same broadcastable body.
+        """
         raise NotImplementedError(self.name)
 
     def _apply_pallas(self, config, state, grad, tau, tau_scalar):
@@ -297,11 +334,14 @@ class AsgdRule(UpdateRule):
     """Plain async SGD: θ ← θ − α·g, staleness ignored (eq. 1)."""
 
     batched_pallas_mode = "coeff"
+    coeffs_are_v_independent = True
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        """Constant α broadcast over the leaf (eq. 1)."""
         return jnp.full(_bshape(v, tau), config.lr, jnp.float32)
 
     def fused_coeffs(self, config, taus):
+        """Constant α per event (eq. 1)."""
         return jnp.full_like(jnp.asarray(taus, jnp.float32), config.lr)
 
 
@@ -310,12 +350,15 @@ class SasgdRule(UpdateRule):
     """Staleness-aware SGD (Zhang et al.): α/τ (eq. 2)."""
 
     batched_pallas_mode = "coeff"
+    coeffs_are_v_independent = True
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        """α/τ broadcast over the leaf (eq. 2)."""
         t = jnp.asarray(tau, jnp.float32)
         return jnp.broadcast_to(config.lr / t, _bshape(v, tau))
 
     def fused_coeffs(self, config, taus):
+        """α/τ_k per event (eq. 2)."""
         return config.lr / jnp.asarray(taus, jnp.float32)
 
 
@@ -324,13 +367,16 @@ class ExpPenaltyRule(UpdateRule):
     """Exponential staleness penalty (Chan & Lane): α·e^{−κ(τ−1)}."""
 
     batched_pallas_mode = "coeff"
+    coeffs_are_v_independent = True
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        """α·e^{−κ(τ−1)} broadcast over the leaf."""
         t = jnp.asarray(tau, jnp.float32)
         return jnp.broadcast_to(
             config.lr * jnp.exp(-config.kappa * (t - 1.0)), _bshape(v, tau))
 
     def fused_coeffs(self, config, taus):
+        """α·e^{−κ(τ_k−1)} per event."""
         t = jnp.asarray(taus, jnp.float32)
         return config.lr * jnp.exp(-config.kappa * (t - 1.0))
 
@@ -345,13 +391,16 @@ class PolyRule(UpdateRule):
     """
 
     batched_pallas_mode = "coeff"
+    coeffs_are_v_independent = True
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        """α/τ^p broadcast over the leaf."""
         t = jnp.asarray(tau, jnp.float32)
         return jnp.broadcast_to(
             config.lr / t ** config.poly_power, _bshape(v, tau))
 
     def fused_coeffs(self, config, taus):
+        """α/τ_k^p per event."""
         t = jnp.asarray(taus, jnp.float32)
         return config.lr / t ** config.poly_power
 
@@ -365,6 +414,7 @@ class FasgdRule(UpdateRule):
     batched_pallas_mode = "fasgd"
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        """α/(v·τ + ε) elementwise in the std moving average v (eq. 7)."""
         return config.lr / (v * jnp.asarray(tau, jnp.float32) + config.eps)
 
     def _apply_pallas(self, config, state, grad, tau, tau_scalar):
@@ -407,10 +457,13 @@ class GapAwareRule(UpdateRule):
     requires_stats = True
 
     def init_extra_state(self, config, params):
+        """ĝ EMA of the typical per-step parameter movement (zeros-init,
+        mirrors the params pytree)."""
         return {"gbar": jax.tree.map(
             lambda l: jnp.zeros(l.shape, jnp.float32), params)}
 
     def update_stats(self, config, state, grad):
+        """Shared eq. 4-6 step plus the ĝ EMA of α·|g| (Barkai et al. §4)."""
         state = _shared_stats(config, state, grad)
         gbar = jax.tree.map(
             lambda m, g: (config.gamma * m
@@ -420,6 +473,7 @@ class GapAwareRule(UpdateRule):
         return state._replace(extra={"gbar": gbar})
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        """α / max(1, |gap|/ĝ) elementwise; α (ASGD) when no gap is given."""
         shape = _bshape(v, tau)
         if gap is None or extra is None:
             return jnp.full(shape, config.lr, jnp.float32)
@@ -437,15 +491,18 @@ class SsgdRule(UpdateRule):
     supports_fused = False
 
     def init_extra_state(self, config, params):
+        """Pending-gradient buffer (mirrors params) + arrival count."""
         return {"pending": jax.tree.map(jnp.zeros_like, params),
                 "count": jnp.zeros((), jnp.int32)}
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        """α/λ broadcast over the leaf (the per-round mean step)."""
         return jnp.full(
             _bshape(v, tau), config.lr / max(config.num_clients, 1),
             jnp.float32)
 
     def apply(self, config, state, grad, tau, tau_scalar, client_params=None):
+        """Buffer `grad`; step θ once `num_clients` gradients arrived."""
         pending = jax.tree.map(jnp.add, state.extra["pending"], grad)
         count = state.extra["count"] + 1
         full = count >= config.num_clients

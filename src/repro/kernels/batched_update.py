@@ -40,18 +40,28 @@ import jax.experimental.pallas.tpu as pltpu
 LANES = 128
 
 
-def _kernel(scal_ref, mask_ref, coeff_ref, tau_ref, p_ref, v_ref, g_ref,
-            po_ref, *, num_events: int, mode: str, eps: float):
+def _kernel(*refs, num_events: int, mode: str, eps: float, has_mask: bool):
+    if has_mask:
+        scal_ref, mask_ref, coeff_ref, tau_ref, p_ref, v_ref, g_ref, po_ref \
+            = refs
+    else:
+        # coefficient plumbing for pre-folded batches: the engine folds the
+        # push mask (and any dedup count weighting) into the coefficient
+        # vector, so the launch carries one SMEM weight operand per leaf.
+        scal_ref, coeff_ref, tau_ref, p_ref, v_ref, g_ref, po_ref = refs
+        mask_ref = None
     lr = scal_ref[0]
     block_shape = p_ref.shape
     v = v_ref[...] if mode == "fasgd" else None
 
     def body(k, acc):
         g = g_ref[k].astype(jnp.float32)
+        w = (coeff_ref[k] if mask_ref is None
+             else mask_ref[k] * coeff_ref[k])
         if mode == "fasgd":
             scale = lr / (v * tau_ref[k] + eps)            # eq. 7, per event
-            return acc + mask_ref[k] * coeff_ref[k] * scale * g
-        return acc + mask_ref[k] * coeff_ref[k] * g
+            return acc + w * scale * g
+        return acc + w * g
 
     acc = jax.lax.fori_loop(
         0, num_events, body, jnp.zeros(block_shape, jnp.float32))
@@ -73,31 +83,38 @@ def batched_scale_apply_2d(
     interpret: bool = False,
 ):
     """One fused Σ_k m_k·c_k·scale(v,τ_k)·g_k apply over tile-aligned
-    buffers.  `masks=None` means every event pushed this leaf."""
+    buffers.
+
+    `masks=None` launches without the mask SMEM operand entirely — the
+    caller pre-folded the push decision (and any event-dedup count
+    weighting) into `coeffs`, or every event pushed this leaf.  Bitwise
+    identical to passing an all-ones mask.
+    """
     assert mode in ("coeff", "fasgd"), mode
     K, R, lanes = grads.shape
     assert lanes == LANES and params.shape == (R, LANES), (grads.shape,
                                                            params.shape)
     assert R % block_rows == 0, (R, block_rows)
-    if masks is None:
-        masks = jnp.ones((K,), jnp.float32)
+    has_mask = masks is not None
     grid = (R // block_rows,)
     tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
     gtile = pl.BlockSpec((K, block_rows, LANES), lambda i: (0, i, 0))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     scalars = jnp.asarray(lr, jnp.float32).reshape(1)
-    kern = functools.partial(_kernel, num_events=K, mode=mode, eps=eps)
+    kern = functools.partial(_kernel, num_events=K, mode=mode, eps=eps,
+                             has_mask=has_mask)
+    mask_ops = (masks.astype(jnp.float32),) if has_mask else ()
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # (lr,)
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # masks [K]
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # coeffs [K]
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # taus [K]
-            tile, tile, gtile,
-        ],
+        in_specs=(
+            [smem]                          # (lr,)
+            + ([smem] if has_mask else [])  # masks [K]
+            + [smem, smem,                  # coeffs [K], taus [K]
+               tile, tile, gtile]
+        ),
         out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((R, LANES), params.dtype),
         interpret=interpret,
-    )(scalars, masks.astype(jnp.float32), coeffs.astype(jnp.float32),
+    )(scalars, *mask_ops, coeffs.astype(jnp.float32),
       taus.astype(jnp.float32), params, v, grads)

@@ -80,10 +80,14 @@ def batched_scale_apply(params: Any, grads: Any, v: Any, coeffs, taus,
     / `v` leaves; `coeffs`/`taus`/`masks` are [K] per-event vectors — either
     one shared vector for the whole tree, or per-leaf pytrees mirroring
     `params` (per-tensor push gating / per-tensor staleness: each leaf's
-    kernel launch gets its own SMEM mask and τ vector).  Semantically
-    identical to the engine's generic per-leaf scale_leaf reduction for
-    rules with `batched_pallas_mode` ('coeff' or 'fasgd'); one HBM pass per
-    leaf instead of K+1 broadcast intermediates.
+    kernel launch gets its own SMEM mask and τ vector).  `masks=None` means
+    the push decision is already folded into `coeffs` (the engine's 'coeff'
+    dispatch pre-multiplies mask×coefficient — and any event-dedup count
+    weighting — into one weight vector), so each leaf launches with one
+    fewer SMEM operand.  Semantically identical to the engine's generic
+    per-leaf scale_leaf reduction for rules with `batched_pallas_mode`
+    ('coeff' or 'fasgd'); one HBM pass per leaf instead of K+1 broadcast
+    intermediates.
     """
     interpret = _auto_interpret(interpret)
     K = jax.tree.leaves(grads)[0].shape[0]
@@ -93,17 +97,19 @@ def batched_scale_apply(params: Any, grads: Any, v: Any, coeffs, taus,
 
     params_def = jax.tree.structure(params)
 
-    def per_leaf(x, fill):
+    def per_leaf(x, fill=None):
         """Broadcast a shared [K] vector (or None) to one entry per leaf."""
         if x is None:
             x = fill
+        if x is None:
+            return [None] * params_def.num_leaves
         if jax.tree.structure(x) == params_def:
             return jax.tree.leaves(x)
         return [x] * params_def.num_leaves
 
-    coeff_leaves = per_leaf(coeffs, None)
-    tau_leaves = per_leaf(taus, None)
-    mask_leaves = per_leaf(masks, jnp.ones((K,), jnp.float32))
+    coeff_leaves = per_leaf(coeffs)
+    tau_leaves = per_leaf(taus)
+    mask_leaves = per_leaf(masks)
 
     def one(p, g, vv, coeff, tau, mask):
         shape, dtype = p.shape, p.dtype

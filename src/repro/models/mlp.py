@@ -29,6 +29,39 @@ def nll_loss(params, x, y):
     return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
 
 
+def nll_loss_event_batched(params, deltas, x, y):
+    """Per-event NLL [K] in the shared/delta form the cotangent fused path
+    contracts over (engine.fused_apply_cotangent).
+
+    `params` is the single differentiable parameter set W; `deltas` carries
+    each event's stop-gradient stale offset δ_k = sg(p_k − W) with [K, ...]
+    leaves; `x` is [K, μ, 784], `y` is [K, μ].  Each layer is evaluated as
+
+        h @ (W_l + δ_l[k])  =  h @ W_l  +  h @ sg(δ_l[k])
+
+    so the differentiable operand of every GEMM is the *shared* W_l: the
+    backward's weight-gradient contraction runs over the flattened [K·μ]
+    event×sample axis and never materializes a [K, P] per-event gradient
+    batch.  Numerically `allclose` to `jax.vmap(nll_loss)` over the
+    per-event effective parameters (tests/test_engine.py).
+    """
+    K, mu = x.shape[0], x.shape[1]
+    h = x
+    last = len(params) - 1
+    for i, (layer, dl) in enumerate(zip(params, deltas)):
+        shared = (h.reshape(K * mu, -1) @ layer["w"]).reshape(K, mu, -1)
+        stale = jnp.einsum("kmi,kio->kmo", h, dl["w"])
+        z = shared + stale + layer["b"] + dl["b"][:, None, :]
+        h = z if i == last else jax.nn.relu(z)
+    logp = jax.nn.log_softmax(h, axis=-1)
+    picked = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked, axis=-1)                              # [K]
+
+
+# the cotangent fused path picks this up via engine.resolve_event_batched_loss
+nll_loss.event_batched = nll_loss_event_batched
+
+
 def accuracy(params, x, y):
     logits = apply_mlp(params, x)
     return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))

@@ -33,6 +33,24 @@ counters) lives in `core/engine.py`, shared with the SPMD round trainer.
   finishing within one dispatch window (they all read the pre-window server
   state) and is the ~K× faster mode that makes λ ≥ 1024 sweeps tractable.
 
+**Fused-path variants** (``SimConfig.fused_mode``): events are first
+deduplicated by fetch timestamp (`engine.dedup_events` — clients that
+fetched at the same T hold bitwise-identical copies, so the stale-parameter
+batch is gathered through group representatives).  Then either
+
+* ``'materialized'``: `vmap(grad_fn)` materializes the [K, P] per-event
+  gradient batch and `engine.fused_apply` reduces it (required for the
+  gradient-cache drop policy, per-tensor gating, gap-aware rules, and the
+  batched Pallas kernel); or
+* ``'cotangent'``: for rules with v-independent coefficients
+  (`UpdateRule.coeffs_are_v_independent`) the weighted gradient sum and the
+  stats mean gradient are computed as vjps of the batched forward with
+  per-event cotangent weights (`engine.fused_apply_cotangent`) — the [K, P]
+  batch is never materialized, which is what breaks the fused path's CPU
+  memory wall (see benchmarks/sim_throughput.py).
+* ``'auto'`` (default) picks 'cotangent' whenever the configuration is
+  eligible, else 'materialized'.
+
 Dropped pushes follow the paper's server-side gradient cache by default
 (`drop_policy='cache'`: re-apply that client's most recent transmitted
 gradient), or `'skip'` (no server update at that opportunity).
@@ -72,11 +90,43 @@ class SimConfig:
     # --- event batching (core/engine.py) ---
     events_per_step: int = 1      # K client events per scan step
     apply_mode: str = "serial"    # 'serial' (paper-faithful) | 'fused'
+    # 'auto' | 'materialized' | 'cotangent' — how fused gradients are
+    # reduced (see module docstring); 'auto' takes the cotangent path
+    # whenever the rule/bandwidth configuration is eligible.
+    fused_mode: str = "auto"
+
+    def cotangent_eligible(self) -> bool:
+        """True iff the cotangent fused path can serve this configuration.
+
+        Needs a rule with v-independent fused coefficients, whole-copy
+        (non-per-tensor) gating, no server-side gradient cache (the cache
+        stores per-event gradients the cotangent path never materializes),
+        and the XLA reduction (`use_fused_kernel` selects the Pallas
+        materialized kernel instead).
+        """
+        rule = server_rules.get_rule(self.server.rule)
+        use_cache = (self.bandwidth.c_push > 0
+                     and self.bandwidth.drop_policy == "cache")
+        return (rule.supports_fused and rule.coeffs_are_v_independent
+                and not self.bandwidth.per_tensor_push
+                and not self.bandwidth.per_tensor_fetch
+                and not use_cache
+                and not self.server.use_fused_kernel)
 
     def __post_init__(self):
         assert self.dispatcher in ("uniform", "roundrobin", "heterogeneous")
         assert self.apply_mode in ("serial", "fused"), self.apply_mode
+        assert self.fused_mode in ("auto", "materialized", "cotangent"), \
+            self.fused_mode
         assert self.events_per_step >= 1, self.events_per_step
+        if self.fused_mode == "cotangent":
+            assert self.apply_mode == "fused", \
+                "fused_mode='cotangent' requires apply_mode='fused'"
+            assert self.cotangent_eligible(), (
+                f"configuration is not cotangent-eligible: rule "
+                f"{self.server.rule!r} must declare coeffs_are_v_independent "
+                f"and gating must be whole-copy without a gradient cache "
+                f"(see SimConfig.cotangent_eligible)")
         rule = server_rules.get_rule(self.server.rule)
         if rule.synchronous:
             # A synchronous barrier only makes sense with a fair schedule.
@@ -175,12 +225,20 @@ def build_step_fn(
     events: Optional[int] = None,   # override config.events_per_step
     mesh=None,                      # optional: shard_map grads over the
     client_axis: str = "clients",   # event axis of this mesh axis
+    batched_loss_fn: Callable = None,   # event-batched loss for the
+                                        # cotangent fused path (see below)
 ):
     """Returns step(state, keys) -> (state, metrics) for lax.scan.
 
     `keys` carries one PRNG key per event, shape [K, ...]; metrics leaves
     are per-event [K] arrays.  Keys must be derived from the *global* event
     index (see `run_simulation`) so serial trajectories are K-invariant.
+
+    `batched_loss_fn(W, deltas, xb, yb) -> [K]` optionally supplies the
+    shared/delta event-batched loss the cotangent fused path contracts over
+    (falls back to `loss_fn.event_batched`, then to the generic
+    `engine.event_batched_losses` wrapper — see
+    `engine.resolve_event_batched_loss`).
     """
     grad_fn = jax.value_and_grad(loss_fn)
     bw = config.bandwidth
@@ -309,6 +367,18 @@ def build_step_fn(
         return step
 
     # ----- fused: all K events advance in one batched protocol round -----
+    use_cotangent = (config.fused_mode == "cotangent"
+                     or (config.fused_mode == "auto"
+                         and config.cotangent_eligible()))
+    if use_cotangent and mesh is not None:
+        if config.fused_mode == "cotangent":
+            raise ValueError(
+                "fused_mode='cotangent' does not support a client-axis mesh "
+                "(shard_map wraps the materialized per-event gradients)")
+        use_cotangent = False
+    batched_losses = (
+        engine.resolve_event_batched_loss(loss_fn, batched_loss_fn)
+        if use_cotangent else None)
     vgrad = jax.vmap(grad_fn)
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
@@ -334,13 +404,22 @@ def build_step_fn(
             cs = jax.vmap(
                 lambda k: jax.random.categorical(k, het_logits))(k_disp)
 
-        # --- K stale-copy gradients in one vmap (the K× hot path) ---
+        # --- per-event minibatch draws ---
         idx = jax.vmap(
             lambda k: jax.random.randint(
                 k, (config.batch_size,), 0, data_x.shape[0]))(k_batch)
         xb, yb = data_x[idx], data_y[idx]                        # [K, μ, ...]
-        p_e = tree_index(state.client_params, cs)                # [K, ...]
-        losses, grads = vgrad(p_e, xb, yb)
+
+        # --- event dedup: clients that fetched at the same T hold bitwise-
+        # identical copies, so the stale-parameter batch is gathered through
+        # group representatives (engine.dedup_events; a no-op permutation of
+        # identical values when every timestamp is distinct).  Under
+        # per-tensor fetch the group key is the client_leaf_ts row (all
+        # tensors must match for two copies to be identical).
+        dedup_key = (state.client_leaf_ts[cs] if bw.per_tensor_fetch
+                     else state.client_ts[cs])
+        rep, _, _ = engine.dedup_events(dedup_key)
+        p_e = tree_index(state.client_params, cs[rep])           # [K, ...]
 
         # --- push gates (pre-window server state, like the serial path) ---
         if bw.per_tensor_push:
@@ -358,17 +437,29 @@ def build_step_fn(
         if bw.per_tensor_fetch:
             # per-tensor staleness: each tensor's τ measured from its own
             # last synchronization (client_leaf_ts lifted into fused mode)
-            leaf_ts = state.client_leaf_ts[cs]               # [K, n_leaves]
+            leaf_ts = dedup_key                              # [K, n_leaves]
             treedef = jax.tree.structure(state.server.params)
             grad_ts = jax.tree.unflatten(
                 treedef, [leaf_ts[:, i] for i in range(leaf_ts.shape[1])])
         else:
-            grad_ts = state.client_ts[cs]                        # [K]
+            grad_ts = dedup_key                                  # [K]
 
-        if state.grad_cache is not None:
+        if use_cotangent:
+            # cotangent path: Σ_k w_k·g_k and the stats mean gradient are
+            # two pullbacks of the batched forward — the [K, P] per-event
+            # gradient batch is never materialized.  Eligibility (checked
+            # statically above) rules out the gradient cache, per-tensor
+            # gating, and gap rules.
+            new_server, taus, losses = engine.fused_apply_cotangent(
+                scfg, state.server,
+                lambda W, deltas: batched_losses(W, deltas, xb, yb),
+                p_e, push, grad_ts)
+            grad_cache = state.grad_cache
+        elif state.grad_cache is not None:
             # cache policy: every opportunity applies *some* gradient (per
             # leaf, in per-tensor mode), so the fused mask is all-ones over
             # the effective gradients.
+            losses, grads = vgrad(p_e, xb, yb)
             cache_e = tree_index(state.grad_cache, cs)
             g_eff = (engine.tree_select_axis(push, grads, cache_e)
                      if bw.per_tensor_push
@@ -379,6 +470,7 @@ def build_step_fn(
             grad_cache = engine.last_event_scatter(
                 state.grad_cache, cs, grads, push, lam)
         else:
+            losses, grads = vgrad(p_e, xb, yb)
             new_server, taus = engine.fused_apply(
                 scfg, state.server, grads, push, grad_ts,
                 client_params=p_e)
@@ -460,6 +552,7 @@ def run_simulation(
     collect_step_metrics: bool = False,
     mesh=None,                            # optional client-axis shard_map mesh
     client_axis: str = "clients",
+    batched_loss_fn=None,                 # cotangent-path event-batched loss
 ):
     """Run the deterministic simulation; returns a results dict.
 
@@ -481,7 +574,8 @@ def run_simulation(
         if k_events not in step_fns:
             step_fns[k_events] = build_step_fn(
                 config, loss_fn, data_x, data_y, events=k_events,
-                mesh=mesh, client_axis=client_axis)
+                mesh=mesh, client_axis=client_axis,
+                batched_loss_fn=batched_loss_fn)
         return step_fns[k_events]
 
     @functools.partial(jax.jit, static_argnames=("n_batches", "k_events"))

@@ -226,3 +226,176 @@ def test_shard_map_fleet_runs_on_host_mesh(setup):
                              eval_every=16, mesh=mesh)
     assert tree_allclose(plain["state"].server.params,
                          sharded["state"].server.params)
+
+
+# ---------------------------------------------------------------------------
+# cotangent fused path + event dedup
+# ---------------------------------------------------------------------------
+
+COTANGENT_RULES = tuple(
+    r for r in ALL_RULES
+    if server_rules.get_rule(r).coeffs_are_v_independent)
+
+
+def test_cotangent_rule_flags_consistent():
+    """Every v-independent-coefficient rule must also be 'coeff'
+    kernelizable and fused-capable (the flag refines, never contradicts)."""
+    assert COTANGENT_RULES == ("asgd", "exp", "poly", "sasgd")
+    for r in COTANGENT_RULES:
+        rule = server_rules.get_rule(r)
+        assert rule.supports_fused and rule.batched_pallas_mode == "coeff"
+    for r in ("fasgd", "gap", "ssgd"):
+        assert not server_rules.get_rule(r).coeffs_are_v_independent
+
+
+@pytest.mark.parametrize("rule", COTANGENT_RULES)
+def test_cotangent_k1_matches_serial(setup, rule):
+    """At K=1 the cotangent fused path is the serial protocol, like the
+    materialized path (one stats step on the single gradient)."""
+    serial = _run(_cfg(rule), setup)
+    cot = _run(dataclasses.replace(_cfg(rule), apply_mode="fused",
+                                   fused_mode="cotangent"), setup)
+    assert tree_allclose(serial["state"].server.params,
+                         cot["state"].server.params, rtol=1e-4)
+    assert serial["final_timestamp"] == cot["final_timestamp"]
+
+
+@pytest.mark.parametrize("rule", COTANGENT_RULES)
+def test_cotangent_matches_materialized_k8(setup, rule):
+    """K>1: cotangent vjp reduction ≡ materialized [K, P] reduction (the
+    default uniform dispatcher at λ=4 produces heavy ts collisions, so the
+    dedup grouping is exercised with group sizes > 1)."""
+    base = dataclasses.replace(
+        _cfg(rule), events_per_step=8, apply_mode="fused")
+    mat = _run(dataclasses.replace(base, fused_mode="materialized"),
+               setup, steps=64)
+    cot = _run(dataclasses.replace(base, fused_mode="cotangent"),
+               setup, steps=64)
+    assert tree_allclose(mat["state"].server.params,
+                         cot["state"].server.params, rtol=1e-4, atol=1e-6)
+    assert mat["final_timestamp"] == cot["final_timestamp"]
+    assert mat["counters"] == cot["counters"]
+
+
+def test_cotangent_matches_materialized_gated_skip(setup):
+    """Push gating (skip policy) rides the cotangent weights: w_k = m_k·c_k."""
+    bw = BandwidthConfig(c_push=2.0, c_fetch=2.0, drop_policy="skip")
+    base = dataclasses.replace(
+        _cfg("sasgd", seed=7, bandwidth=bw),
+        events_per_step=8, apply_mode="fused")
+    mat = _run(dataclasses.replace(base, fused_mode="materialized"),
+               setup, steps=64)
+    cot = _run(dataclasses.replace(base, fused_mode="cotangent"),
+               setup, steps=64)
+    assert tree_allclose(mat["state"].server.params,
+                         cot["state"].server.params, rtol=1e-4, atol=1e-6)
+    assert mat["counters"] == cot["counters"]
+    assert mat["final_timestamp"] == cot["final_timestamp"] < 64
+
+
+def test_fused_auto_mode_selection(setup):
+    """'auto' takes the cotangent path exactly when eligible: bitwise equal
+    to the explicit mode it resolves to."""
+    sasgd = dataclasses.replace(_cfg("sasgd"), events_per_step=4,
+                                apply_mode="fused")
+    auto = _run(sasgd, setup)
+    cot = _run(dataclasses.replace(sasgd, fused_mode="cotangent"), setup)
+    assert tree_equal(auto["state"].server.params,
+                      cot["state"].server.params)
+    # fasgd is v-dependent: auto must resolve to materialized
+    fasgd = dataclasses.replace(_cfg("fasgd"), events_per_step=4,
+                                apply_mode="fused")
+    assert not fasgd.cotangent_eligible()
+    auto_f = _run(fasgd, setup)
+    mat_f = _run(dataclasses.replace(fasgd, fused_mode="materialized"),
+                 setup)
+    assert tree_equal(auto_f["state"].server.params,
+                      mat_f["state"].server.params)
+
+
+def test_cotangent_rejects_ineligible_configs(setup):
+    # v-dependent rule
+    with pytest.raises(AssertionError, match="cotangent"):
+        dataclasses.replace(_cfg("fasgd"), apply_mode="fused",
+                            fused_mode="cotangent")
+    # gradient cache stores per-event gradients the cotangent path never
+    # materializes
+    with pytest.raises(AssertionError, match="cotangent"):
+        dataclasses.replace(
+            _cfg("sasgd", bandwidth=BandwidthConfig(c_push=1.0,
+                                                    drop_policy="cache")),
+            apply_mode="fused", fused_mode="cotangent")
+    # per-leaf masks need per-leaf weight vectors
+    with pytest.raises(AssertionError, match="cotangent"):
+        dataclasses.replace(
+            _cfg("sasgd", bandwidth=BandwidthConfig(per_tensor_fetch=True)),
+            apply_mode="fused", fused_mode="cotangent")
+    # engine-level guards
+    params = {"w": jnp.ones((4, 3))}
+    scfg = ServerConfig(rule="fasgd")
+    server = server_rules.init(scfg, params)
+    with pytest.raises(ValueError, match="cotangent"):
+        engine.fused_apply_cotangent(
+            scfg, server, lambda W, d: jnp.zeros((2,)),
+            engine.tree_stack(params, 2), jnp.ones((2,), bool),
+            jnp.zeros((2,), jnp.int32))
+
+
+def test_dedup_events_grouping():
+    ts = jnp.array([3, 5, 3, 7, 5], jnp.int32)
+    rep, counts, is_rep = engine.dedup_events(ts)
+    np.testing.assert_array_equal(np.asarray(rep), [0, 1, 0, 3, 1])
+    np.testing.assert_array_equal(np.asarray(counts), [2, 2, 2, 1, 2])
+    np.testing.assert_array_equal(np.asarray(is_rep),
+                                  [True, True, False, True, False])
+    # all-distinct timestamps: dedup is the identity (no-op)
+    rep, counts, is_rep = engine.dedup_events(
+        jnp.array([9, 2, 4], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(rep), [0, 1, 2])
+    np.testing.assert_array_equal(np.asarray(counts), [1, 1, 1])
+    assert np.asarray(is_rep).all()
+    # per-leaf rows (client_leaf_ts): a group needs ALL leaves to match
+    rows = jnp.array([[1, 2], [1, 3], [1, 2]], jnp.int32)
+    rep, counts, _ = engine.dedup_events(rows)
+    np.testing.assert_array_equal(np.asarray(rep), [0, 1, 0])
+    np.testing.assert_array_equal(np.asarray(counts), [2, 1, 2])
+
+
+def test_event_batched_mlp_loss_matches_vmap(setup):
+    """The shared/delta MLP form == vmap(nll_loss) over effective params."""
+    from repro.models.mlp import init_mlp, nll_loss
+    k_p, k_d, k_x, k_y = jax.random.split(jax.random.PRNGKey(0), 4)
+    W = init_mlp(k_p, (10, 6, 4))
+    K, mu = 5, 3
+    stale = jax.tree.map(
+        lambda l: l[None] + 0.05 * jax.random.normal(
+            jax.random.fold_in(k_d, l.size), (K,) + l.shape), W)
+    deltas = jax.tree.map(lambda s, w: s - w[None], stale, W)
+    x = jax.random.normal(k_x, (K, mu, 10))
+    y = jax.random.randint(k_y, (K, mu), 0, 4)
+    fast = nll_loss.event_batched(W, deltas, x, y)
+    generic = engine.event_batched_losses(nll_loss)(W, deltas, x, y)
+    direct = jax.vmap(nll_loss)(
+        jax.tree.map(lambda w, d: w[None] + d, W, deltas), x, y)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(direct),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(generic), np.asarray(direct),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_fused_tracks_stats_consistently_with_serial(setup):
+    """track_stats=False now skips the fused stats step like the serial
+    path does (n/b/v stay at init); the parameter trajectory for a
+    v-independent rule is unaffected."""
+    cfg = dataclasses.replace(
+        _cfg("sasgd", server_kwargs={"track_stats": False}),
+        events_per_step=4, apply_mode="fused", fused_mode="materialized")
+    on = dataclasses.replace(
+        _cfg("sasgd"), events_per_step=4, apply_mode="fused",
+        fused_mode="materialized")
+    r_off = _run(cfg, setup)
+    r_on = _run(on, setup)
+    assert tree_allclose(r_off["state"].server.params,
+                         r_on["state"].server.params, rtol=1e-5)
+    assert tree_equal(r_off["state"].server.v,
+                      jax.tree.map(jnp.ones_like, r_off["state"].server.v))

@@ -141,3 +141,76 @@ def test_round_trainer_timestamp_equals_total_pushes(seed, lam):
         st_, m = step(st_, (x, y), jax.random.fold_in(jax.random.PRNGKey(seed), i))
         total += int(m["pushes"])
     assert int(st_.server.timestamp) == total
+
+
+@given(seed=st.integers(0, 2**30), k=st.integers(1, 12),
+       distinct=st.booleans(),
+       rule=st.sampled_from([r for r in rules.registered_rules()
+                             if rules.get_rule(r).coeffs_are_v_independent]))
+@settings(max_examples=30, deadline=None)
+def test_cotangent_fused_matches_materialized_under_collisions(
+        seed, k, distinct, rule):
+    """For every coeffs_are_v_independent rule the cotangent fused path is
+    allclose to the materialized fused path under random `client_ts`
+    collision patterns (dedup group sizes 1..K), and the dedup gather is a
+    no-op (bitwise-identity) when all timestamps are distinct."""
+    from repro.core import engine
+    from repro.models.mlp import init_mlp, nll_loss
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    sizes, mu = (6, 4, 3), 3
+    base = init_mlp(keys[0], sizes)
+
+    # stale copies as a deterministic function of the fetch timestamp, so
+    # ts collisions imply bitwise-identical copies (the FRED invariant
+    # dedup relies on).
+    n_versions = k if distinct else max(1, k // 2)
+    table = jax.tree.map(
+        lambda l: l[None]
+        + 0.01 * jnp.arange(n_versions).reshape((-1,) + (1,) * l.ndim),
+        base)                                      # leaves [V, ...]
+    if distinct:
+        ts = jax.random.permutation(keys[1], jnp.arange(k))[:k]
+    else:
+        ts = jax.random.randint(keys[1], (k,), 0, n_versions)
+    ts = ts.astype(jnp.int32)
+    stale = jax.tree.map(lambda l: l[ts], table)   # [K, ...]
+    push = jax.random.bernoulli(keys[2], 0.7, (k,))
+    x = jax.random.normal(keys[3], (k, mu, sizes[0]))
+    y = jax.random.randint(keys[4], (k, mu), 0, sizes[-1])
+
+    scfg = ServerConfig(rule=rule, lr=0.05)
+    server = rules.init(scfg, base)._replace(
+        timestamp=jnp.int32(n_versions))           # so tau = T - ts >= 1
+
+    # dedup: representative gather must be bitwise-identical to the direct
+    # gather (same-ts rows are identical by construction)
+    rep, counts, is_rep = engine.dedup_events(ts)
+    stale_rep = jax.tree.map(lambda l: l[rep], stale)
+    for a, b in zip(jax.tree.leaves(stale), jax.tree.leaves(stale_rep)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    if distinct:
+        assert np.array_equal(np.asarray(rep), np.arange(k))   # no-op
+        assert np.asarray(counts).tolist() == [1] * k
+    assert int(np.asarray(counts)[0]) >= 1 and np.asarray(
+        counts).max() <= k
+
+    losses_m, grads = jax.vmap(jax.value_and_grad(nll_loss))(stale, x, y)
+    server_m, taus_m = engine.fused_apply(scfg, server, grads, push, ts)
+
+    batched = engine.event_batched_losses(nll_loss)
+    server_c, taus_c, losses_c = engine.fused_apply_cotangent(
+        scfg, server, lambda W, d: batched(W, d, x, y), stale_rep, push, ts)
+
+    np.testing.assert_allclose(np.asarray(losses_c), np.asarray(losses_m),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(taus_c), np.asarray(taus_m))
+    assert int(server_c.timestamp) == int(server_m.timestamp)
+    for a, b in zip(jax.tree.leaves(server_m.params),
+                    jax.tree.leaves(server_c.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(server_m.v),
+                    jax.tree.leaves(server_c.v)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)

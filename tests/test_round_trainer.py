@@ -173,3 +173,73 @@ def test_round_trainer_decreases_loss(setup):
         if first is None:
             first = float(m["loss"])
     assert float(m["loss"]) < first
+
+
+def test_round_cotangent_matches_materialized(setup):
+    """Fused cotangent reduction == materialized [C, P] reduction in the
+    round trainer (discard policy, v-independent rule)."""
+    import dataclasses
+    from repro.models.mlp import nll_loss_event_batched
+
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="sasgd", lr=0.02,
+                       drop_policy="discard", c_fetch=1.5)
+    bl = lambda W, d, b: nll_loss_event_batched(W, d, b[0], b[1])
+
+    def run(tc_, **kw):
+        st = init_round_state(tc_, params)
+        step = jax.jit(build_round_step(tc_, grad_fn, apply_mode="fused",
+                                        **kw))
+        for i in range(6):
+            st, m = step(st, batch, jax.random.PRNGKey(i))
+        return st, m
+
+    st_m, m_m = run(dataclasses.replace(tc, fused_mode="materialized"))
+    st_c, m_c = run(dataclasses.replace(tc, fused_mode="cotangent"),
+                    batched_loss_fn=bl)
+    assert tree_allclose(st_m.server.params, st_c.server.params,
+                         rtol=1e-4, atol=1e-6)
+    assert tree_allclose(st_m.client_params, st_c.client_params,
+                         rtol=1e-4, atol=1e-6)
+    assert int(st_m.server.timestamp) == int(st_c.server.timestamp)
+    np.testing.assert_allclose(float(m_m["loss"]), float(m_c["loss"]),
+                               rtol=1e-5)
+
+    # 'auto' without an event-batched loss silently stays materialized
+    st_a, _ = run(tc)
+    assert tree_equal(st_a.server.params, st_m.server.params)
+
+    # explicit cotangent without eligibility is rejected
+    with pytest.raises(ValueError, match="cotangent"):
+        build_round_step(
+            dataclasses.replace(tc, drop_policy="local_apply",
+                                fused_mode="cotangent"),
+            grad_fn, apply_mode="fused", batched_loss_fn=bl)
+
+
+def test_round_cotangent_via_attached_event_batched(setup):
+    """The model-attached `grad_fn.event_batched` hook (model convention
+    batched(W, deltas, *batch)) is adapted by splatting the batch tuple."""
+    import dataclasses
+    from repro.models.mlp import nll_loss_event_batched
+
+    params, batch, grad_fn = setup
+    tc = TrainerConfig(num_round_clients=4, rule="sasgd", lr=0.02,
+                       drop_policy="discard", fused_mode="cotangent")
+
+    def grad_fn2(p, b):
+        return grad_fn(p, b)
+    grad_fn2.event_batched = nll_loss_event_batched
+
+    def run(tc_, gf, **kw):
+        st = init_round_state(tc_, params)
+        step = jax.jit(build_round_step(tc_, gf, apply_mode="fused", **kw))
+        for i in range(4):
+            st, _ = step(st, batch, jax.random.PRNGKey(i))
+        return st
+
+    via_attr = run(tc, grad_fn2)
+    via_arg = run(tc, grad_fn,
+                  batched_loss_fn=lambda W, d, b: nll_loss_event_batched(
+                      W, d, b[0], b[1]))
+    assert tree_equal(via_attr.server.params, via_arg.server.params)
