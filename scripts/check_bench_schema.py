@@ -68,6 +68,38 @@ SCHEMAS = {
         "fasgd_update": _KERNEL_ENTRY,
         "batched_update": dict(_KERNEL_ENTRY, num_events="int"),
     },
+    "BENCH_queue.json": {
+        "model_sizes": ("list", "int"),
+        "batch_size": "int",
+        "rule": "str",
+        "lam": "int",
+        "methodology": "str",
+        "quick": "bool",
+        "rows": ("list", {
+            "policy": "str",              # 'drain_k' | 'adaptive'
+            "arrival_k": "int",           # events per drain window
+            "drain_k": "int",             # fixed budget / adaptive floor
+            "queue_capacity": "int",
+            "admission_policy": "str",
+            "applied_events_per_sec": "number",
+            "arrival_events_per_sec": "number",
+            "compile_s": "number",
+            "final_cost": "number",
+            "drained": "number",
+            "rejected": "number",
+            "dropped": "number",
+            "mean_depth": "number",
+            "peak_depth": "number",
+            "mean_latency_ticks": "number",
+        }),
+        "summary": {
+            "operating_points": "int",
+            # operating points where adaptive beats drain_k on applied
+            # events/sec at equal-or-better final cost (acceptance: >= 2
+            # in the full run)
+            "adaptive_wins": "int",
+        },
+    },
     "BENCH_fig3_bandwidth.json": {
         "quick": "bool",
         "steps": "int",

@@ -144,4 +144,16 @@ class TrainerConfig:
     # cotangent path never materializes), and an event-batched loss
     # (build_round_step's batched_loss_fn or grad_fn.event_batched).
     fused_mode: str = "auto"
+    # --- bounded server ingress queue (core/queue.py) ---
+    # 0 = immediate apply; > 0 bounds how many pushed gradients the server
+    # holds pending — each round the C pushes are admitted under
+    # `admission_policy` ('block' | 'reject' | 'drop_oldest') and a drain
+    # policy ('drain_all' | 'drain_k' | 'adaptive') decides how many queued
+    # events the canonical update applies, so backlog (and staleness) grows
+    # when arrivals outpace the drain.  Mirrors fred.SimConfig.
+    queue_capacity: int = 0
+    drain_policy: str = "drain_all"
+    drain_k: int = 1
+    drain_adaptive_gain: float = 0.5
+    admission_policy: str = "block"
     seed: int = 0

@@ -7,6 +7,9 @@
 - `engine`    — the shared protocol core: gates, gated/serial/fused
                 application, counters (consumed by `sim.fred` AND
                 `round_trainer` — the single source of protocol truth)
+- `queue`     — bounded server ingress queue: pure-pytree ring buffer with
+                pluggable admission (block/reject/drop_oldest) and drain
+                (drain_all/drain_k/adaptive) policies + load telemetry
 - `round_trainer` — SPMD round-based FASGD for pod-scale training
 """
 from repro.core.rules import (
@@ -43,6 +46,18 @@ from repro.core.engine import (
     resolve_event_batched_loss,
     serial_apply,
     transmit_gate,
+)
+from repro.core.queue import (
+    ADMISSION_POLICIES,
+    DRAIN_POLICIES,
+    Arrivals,
+    Drained,
+    QueueState,
+    count_queue,
+    dequeue,
+    drain_count,
+    enqueue,
+    init_queue,
 )
 from repro.core.staleness import step_staleness, b_staleness
 from repro.core.round_trainer import (

@@ -123,6 +123,12 @@ class Counters(NamedTuple):
     Scalar gating accounts whole-copy bytes; per-tensor gating accounts each
     tensor independently.
 
+    The `queue_*` fields are the ingress-queue telemetry (`core/queue.py`,
+    folded in by `queue.count_queue`); they stay zero on the immediate-apply
+    path.  `push_actual`/`push_bytes_sent` count *admitted* pushes only —
+    a push the admission policy rejects is refused before transmission and
+    must never be double-counted as sent bytes.
+
     No jnp defaults here on purpose: NamedTuple defaults are evaluated at
     module import, which would stage device ops before the caller configures
     jax — use `init_counters()`.
@@ -136,13 +142,23 @@ class Counters(NamedTuple):
     push_bytes_total: jnp.ndarray
     fetch_bytes_sent: jnp.ndarray
     fetch_bytes_total: jnp.ndarray
+    # ingress-queue telemetry (core/queue.py; zero when the queue is off)
+    queue_enqueued: jnp.ndarray     # int32 — pushes admitted to the ring
+    queue_rejected: jnp.ndarray     # int32 — refused before transmission
+    queue_dropped: jnp.ndarray      # int32 — evicted by drop_oldest
+    queue_drained: jnp.ndarray      # int32 — events applied from the ring
+    queue_depth_sum: jnp.ndarray    # float32 — Σ post-drain depth per window
+    queue_depth_peak: jnp.ndarray   # int32 — max post-admission depth
+    queue_latency_sum: jnp.ndarray  # float32 — Σ admission→drain T-ticks
+    queue_windows: jnp.ndarray      # int32 — drain windows accumulated
 
 
 def init_counters() -> Counters:
     """All-zero `Counters` (see the class docstring for why not defaults)."""
     zero = jnp.zeros((), jnp.int32)
     zf = jnp.zeros((), jnp.float32)
-    return Counters(zero, zero, zero, zero, zf, zf, zf, zf)
+    return Counters(zero, zero, zero, zero, zf, zf, zf, zf,
+                    zero, zero, zero, zero, zf, zero, zf, zero)
 
 
 def _acc_bytes(prev, amount):
@@ -154,10 +170,16 @@ def _acc_bytes(prev, amount):
 def count_events(counters: Counters, push, fetch,
                  push_bytes_sent=None, push_bytes_total=None,
                  fetch_bytes_sent=None, fetch_bytes_total=None) -> Counters:
-    """Fold one batch of events in: `push`/`fetch` are bool scalars or [K]."""
+    """Fold one batch of events in: `push`/`fetch` are bool scalars or [K].
+
+    On the queued path `push` must be the *admitted* mask, not the raw gate
+    decision: a rejected push never crossed the wire, so it contributes to
+    neither `push_actual` nor `push_bytes_sent` (the queue's own
+    `queue_rejected` counter records it instead).
+    """
     push = jnp.atleast_1d(push)
     fetch = jnp.atleast_1d(fetch)
-    return Counters(
+    return counters._replace(
         push_potential=counters.push_potential + jnp.int32(push.size),
         push_actual=counters.push_actual + jnp.sum(push.astype(jnp.int32)),
         fetch_potential=counters.fetch_potential + jnp.int32(fetch.size),

@@ -1,0 +1,288 @@
+"""Bounded server ingress queue: ring buffer + admission + drain policies.
+
+The engine used to apply every push the instant it arrived, so the simulator
+never modeled a *loaded* parameter server — yet staleness only bites when
+arrivals outpace application (Dutta et al., arXiv:1803.01113; Dai et al.,
+arXiv:1810.03264).  This module is that missing subsystem: a fixed-capacity
+ring buffer of pending push events that lives entirely inside
+`jax.lax.scan` (every field is a fixed-shape pytree; head/size are traced
+scalars), plus the two policy families that govern it:
+
+**Admission** (`enqueue`) — what happens when a push arrives at a full queue:
+
+- ``'block'``    — lossless backpressure.  The configs only allow it when
+  overflow is provably impossible (capacity ≥ the arrival window and a
+  ``drain_all`` drain), because a fixed-shape scan cannot suspend a client;
+  an admission failure under 'block' would mean that invariant broke.
+- ``'reject'``   — the server refuses the push *before* transmission; the
+  gradient is lost and its bytes are **not** counted as sent.
+- ``'drop_oldest'`` — the push is admitted (bytes counted: it crossed the
+  wire) and the oldest queued event is evicted to make room.
+
+**Drain** (`drain_count`) — how many queued events one server pass applies:
+
+- ``'drain_all'`` — the whole backlog, every window (an infinitely fast
+  server; with capacity 1 this reduces to the immediate-apply path).
+- ``'drain_k'``   — at most ``drain_k`` events per window (a rate-limited
+  server; backlog and staleness grow when arrivals outpace it).
+- ``'adaptive'``  — ``min(size, max(drain_k, ceil(gain·size)))``: the batch
+  grows with queue depth, so a loaded server sheds backlog in large fused
+  batches while an idle one keeps per-event latency low.
+
+The payload is an arbitrary pytree chosen by the caller — FRED queues
+gradients (+ per-event loss, + stale copies for gap-aware rules), or stale
+copies + minibatch indices for the cotangent fused path, which defers the
+forward/backward to drain time.  Dequeued batches are fixed-shape
+``[capacity, ...]`` with a validity mask, sized for the engine's
+`serial_apply` / `fused_apply` / `fused_apply_cotangent`.
+
+Telemetry rides the shared engine `Counters` (`count_queue`): admitted /
+rejected / dropped / drained event counts, post-drain depth integral, peak
+depth, and queueing latency measured in server-timestamp ticks between
+admission and drain.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.engine import Counters, tree_index
+
+
+class QueueState(NamedTuple):
+    """The ring buffer: pending push events as fixed-shape pytree arrays.
+
+    Slots live at ``(head + i) % capacity`` for ``i < size``; everything
+    else is stale garbage that admission/drain masks keep inert.  All
+    fields are server-side state (replicated, never sharded over the
+    client axis).
+    """
+
+    payload: Any                  # caller pytree, leaves [capacity, ...]
+    ts: jnp.ndarray               # [capacity] int32 — stale-copy timestamp
+    client: jnp.ndarray           # [capacity] int32 — pushing client id
+    enq_T: jnp.ndarray            # [capacity] int32 — server T at admission
+    head: jnp.ndarray             # int32 — oldest live slot
+    size: jnp.ndarray             # int32 — number of live slots
+    # per-tensor (§5) extension: per-leaf timestamps / push masks
+    leaf_ts: Optional[jnp.ndarray] = None    # [capacity, n_leaves] int32
+    leaf_mask: Optional[Any] = None          # pytree of [capacity] bool
+
+    @property
+    def capacity(self) -> int:
+        """Static ring capacity (the slot-array length)."""
+        return self.ts.shape[0]
+
+
+class Arrivals(NamedTuple):
+    """One window of candidate pushes, shaped [K, ...] per leaf.
+
+    ``valid`` marks the rows that actually want to enqueue (e.g. pushes the
+    eq.-9 gate let through); invalid rows never touch the ring.  ``leaf_ts``
+    / ``leaf_mask`` carry the per-tensor (§5) timestamps and push masks and
+    may be None when whole-copy gating is in effect.
+    """
+
+    payload: Any                  # pytree, leaves [K, ...]
+    ts: jnp.ndarray               # [K] int32
+    client: jnp.ndarray           # [K] int32
+    valid: jnp.ndarray            # [K] bool
+    leaf_ts: Optional[jnp.ndarray] = None    # [K, n_leaves] int32
+    leaf_mask: Optional[Any] = None          # pytree of [K] bool
+
+
+class Drained(NamedTuple):
+    """A dequeued batch: fixed [capacity, ...] leaves + validity mask.
+
+    Row ``i`` holds the ``i``-th oldest drained event iff ``valid[i]``;
+    invalid rows are stale ring garbage (finite values — callers mask them
+    out of the apply via the push argument, never by dynamic slicing, so
+    the batch shape stays static under `jax.lax.scan`).
+    """
+
+    payload: Any
+    ts: jnp.ndarray               # [capacity] int32
+    client: jnp.ndarray           # [capacity] int32
+    enq_T: jnp.ndarray            # [capacity] int32
+    valid: jnp.ndarray            # [capacity] bool
+    leaf_ts: Optional[jnp.ndarray] = None
+    leaf_mask: Optional[Any] = None
+
+
+ADMISSION_POLICIES = ("block", "reject", "drop_oldest")
+DRAIN_POLICIES = ("drain_all", "drain_k", "adaptive")
+
+
+def init_queue(capacity: int, payload_example, *, n_leaves: int = 0,
+               mask_like=None) -> QueueState:
+    """An empty ring of `capacity` slots.
+
+    `payload_example` is a single-event pytree (no leading event axis)
+    fixing the payload structure/shapes/dtypes; slots start zeroed.
+    `n_leaves > 0` allocates the per-tensor timestamp matrix
+    (``leaf_ts [capacity, n_leaves]``); `mask_like` (a params-like pytree)
+    allocates the per-leaf push-mask pytree (``leaf_mask``).
+    """
+    assert capacity >= 1, capacity
+    return QueueState(
+        payload=jax.tree.map(
+            lambda l: jnp.zeros((capacity,) + jnp.shape(l),
+                                jnp.asarray(l).dtype),
+            payload_example),
+        ts=jnp.zeros((capacity,), jnp.int32),
+        client=jnp.zeros((capacity,), jnp.int32),
+        enq_T=jnp.zeros((capacity,), jnp.int32),
+        head=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+        leaf_ts=(jnp.zeros((capacity, n_leaves), jnp.int32)
+                 if n_leaves else None),
+        leaf_mask=(jax.tree.map(
+            lambda _: jnp.zeros((capacity,), bool), mask_like)
+            if mask_like is not None else None),
+    )
+
+
+def enqueue(q: QueueState, arrivals: Arrivals, admission: str, enq_T):
+    """Admit one window of arrivals under an admission policy.
+
+    `admission` is ``'block'`` / ``'reject'`` / ``'drop_oldest'`` (module
+    docstring); `enq_T` is the server timestamp stamped on admitted slots
+    (the latency clock's start).  Valid arrivals are packed into the free
+    tail of the ring in arrival order via an exclusive prefix-sum of
+    ``arrivals.valid``; slot collisions (more admissions than capacity under
+    ``'drop_oldest'``) resolve deterministically last-arrival-wins through
+    `engine.last_event_winners` — jnp scatter order is unspecified and FRED's
+    bitwise-determinism contract forbids relying on it.
+
+    Returns ``(queue, admitted [K] bool, n_rejected, n_dropped)`` where
+    `admitted` marks arrivals that reached the ring (the rows whose bytes
+    count as transmitted), `n_rejected` counts refused-before-send arrivals
+    ('block'/'reject' at a full ring) and `n_dropped` counts evictions
+    ('drop_oldest': old entries evicted *plus* same-window arrivals
+    overwritten when the window itself exceeds capacity).
+    """
+    assert admission in ADMISSION_POLICIES, admission
+    cap = q.capacity
+    valid = arrivals.valid
+    validi = valid.astype(jnp.int32)
+    rank = jnp.cumsum(validi) - validi          # exclusive: admission order
+    n_valid = jnp.sum(validi)
+
+    if admission in ("block", "reject"):
+        free = jnp.maximum(cap - q.size, 0)
+        admitted = valid & (rank < free)
+        n_admit = jnp.minimum(n_valid, free)
+        n_rejected = n_valid - n_admit
+        n_dropped = jnp.zeros((), jnp.int32)
+        new_head = q.head
+        new_size = q.size + n_admit
+    else:  # drop_oldest: everything valid is admitted, oldest slots evicted
+        admitted = valid
+        n_admit = n_valid
+        n_dropped = jnp.maximum(q.size + n_admit - cap, 0)
+        n_rejected = jnp.zeros((), jnp.int32)
+        new_head = jnp.where(n_dropped > 0,
+                             (q.head + n_dropped) % cap, q.head)
+        new_size = jnp.minimum(q.size + n_admit, cap)
+
+    # target slots: pack admissions after the current tail (wrapping); under
+    # drop_oldest the wrap lands exactly on the evicted oldest slots.
+    slot = (q.head + q.size + rank) % cap
+    win = engine.last_event_winners(slot, eligible=admitted)
+    idx = jnp.where(win, slot, cap)             # losers → dropped by scatter
+
+    def put(l, v):
+        return l.at[idx].set(v, mode="drop")
+
+    q = QueueState(
+        payload=jax.tree.map(put, q.payload, arrivals.payload),
+        ts=put(q.ts, arrivals.ts.astype(jnp.int32)),
+        client=put(q.client, arrivals.client.astype(jnp.int32)),
+        enq_T=put(q.enq_T, jnp.broadcast_to(
+            jnp.asarray(enq_T, jnp.int32), valid.shape)),
+        head=new_head,
+        size=new_size,
+        leaf_ts=(None if q.leaf_ts is None
+                 else put(q.leaf_ts, arrivals.leaf_ts.astype(jnp.int32))),
+        leaf_mask=(None if q.leaf_mask is None
+                   else jax.tree.map(put, q.leaf_mask, arrivals.leaf_mask)),
+    )
+    return q, admitted, n_rejected, n_dropped
+
+
+def drain_count(size, policy: str, *, drain_k: int = 1, gain: float = 0.5):
+    """How many events one server pass applies (int32 scalar ≤ `size`).
+
+    ``'drain_all'`` → the whole backlog; ``'drain_k'`` → at most `drain_k`;
+    ``'adaptive'`` → ``min(size, max(drain_k, ceil(gain·size)))`` — the
+    depth-proportional batch that sheds a deep backlog in large fused
+    applications while keeping a shallow queue at drain_k-like latency.
+    """
+    assert policy in DRAIN_POLICIES, policy
+    size = jnp.asarray(size, jnp.int32)
+    if policy == "drain_all":
+        return size
+    if policy == "drain_k":
+        return jnp.minimum(size, jnp.int32(drain_k))
+    target = jnp.maximum(
+        jnp.int32(drain_k),
+        jnp.ceil(gain * size.astype(jnp.float32)).astype(jnp.int32))
+    return jnp.minimum(size, target)
+
+
+def dequeue(q: QueueState, k):
+    """Pop the `k` oldest events as a fixed-shape `Drained` batch.
+
+    `k` is a traced int32 (from `drain_count`); the batch is always
+    ``[capacity]``-shaped with ``valid = arange(capacity) < k`` so the scan
+    stays fixed-shape — row ``i`` gathers slot ``(head + i) % capacity``.
+    Drained slots are not cleared (their garbage is masked by `valid`
+    downstream); head advances by `k`.
+    """
+    cap = q.capacity
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    slot = (q.head + pos) % cap
+    k = jnp.asarray(k, jnp.int32)
+    batch = Drained(
+        payload=tree_index(q.payload, slot),
+        ts=q.ts[slot],
+        client=q.client[slot],
+        enq_T=q.enq_T[slot],
+        valid=pos < k,
+        leaf_ts=None if q.leaf_ts is None else q.leaf_ts[slot],
+        leaf_mask=(None if q.leaf_mask is None
+                   else jax.tree.map(lambda m: m[slot], q.leaf_mask)),
+    )
+    return q._replace(head=(q.head + k) % cap, size=q.size - k), batch
+
+
+def count_queue(counters: Counters, *, enqueued, rejected, dropped, drained,
+                depth_post, depth_peak, latency_sum) -> Counters:
+    """Fold one drain window into the queue fields of the engine `Counters`.
+
+    `depth_post` is the post-drain backlog (its running sum over
+    ``queue_windows`` windows is the mean standing depth); `depth_peak` the
+    post-admission depth (its running max is the high-water mark);
+    `latency_sum` the summed admission→drain latency of this window's
+    drained events, in server-timestamp ticks.
+    """
+    return counters._replace(
+        queue_enqueued=counters.queue_enqueued
+        + jnp.asarray(enqueued, jnp.int32),
+        queue_rejected=counters.queue_rejected
+        + jnp.asarray(rejected, jnp.int32),
+        queue_dropped=counters.queue_dropped
+        + jnp.asarray(dropped, jnp.int32),
+        queue_drained=counters.queue_drained
+        + jnp.asarray(drained, jnp.int32),
+        queue_depth_sum=counters.queue_depth_sum
+        + jnp.asarray(depth_post, jnp.float32),
+        queue_depth_peak=jnp.maximum(
+            counters.queue_depth_peak, jnp.asarray(depth_peak, jnp.int32)),
+        queue_latency_sum=counters.queue_latency_sum
+        + jnp.asarray(latency_sum, jnp.float32),
+        queue_windows=counters.queue_windows + jnp.int32(1),
+    )

@@ -34,16 +34,29 @@ Dropped pushes follow ``drop_policy``:
    own copy (local-SGD semantics — the paper's "averaging unsent gradients
    on the clients" speculation).
  - ``'discard'``: the gradient is simply dropped.
+
+**Bounded ingress queue** (``TrainerConfig.queue_capacity > 0``,
+`core/queue.py`): pushed gradients are admitted into a fixed-capacity ring
+instead of applying immediately; each round drains ``drain_count`` queued
+events into the canonical update, so the server models a bounded apply rate
+and the backlog (hence staleness) grows when C pushes/round outpace it.  A
+push the admission policy rejects falls back to the client's ``drop_policy``
+(its bytes are *not* counted as sent — it was refused before transmission).
+The cotangent fused path is not wired through the round trainer's queue
+(it would need the round's minibatch queued alongside each stale copy, as
+FRED does); ``fused_mode='auto'`` falls back to the materialized reduction
+and an explicit ``'cotangent'`` with a queue is rejected.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainerConfig
 from repro.core import engine
+from repro.core import queue as qlib
 from repro.core import rules as server_rules
 from repro.core.bandwidth import masked_bytes, tree_bytes
 from repro.core.engine import Counters
@@ -61,6 +74,8 @@ class RoundState(NamedTuple):
     # per-tensor gating (§5): [C, n_leaves] int32 — the timestamp at which
     # each TENSOR of each client group's copy last synchronized.
     client_leaf_ts: Any = None
+    # bounded server ingress queue (tc.queue_capacity > 0; core/queue.py)
+    queue: Optional[qlib.QueueState] = None
 
 
 def server_config(tc: TrainerConfig) -> ServerConfig:
@@ -73,9 +88,19 @@ def server_config(tc: TrainerConfig) -> ServerConfig:
     )
 
 
+def _queue_payload_example(tc: TrainerConfig, params):
+    """Single-event payload the round trainer's ingress queue stores: the
+    pushed gradient, plus the pushing copy for gap-aware rules."""
+    payload = {"grad": params}
+    if server_rules.get_rule(tc.rule).needs_client_params:
+        payload["copy"] = params
+    return payload
+
+
 def init_round_state(tc: TrainerConfig, params) -> RoundState:
     """Fresh `RoundState`: server at T = 0, C identical client copies,
-    zeroed counters (and per-tensor timestamps when configured)."""
+    zeroed counters (and per-tensor timestamps / an empty ingress queue
+    when configured)."""
     scfg = server_config(tc)
     n_leaves = len(jax.tree.leaves(params))
     return RoundState(
@@ -87,6 +112,11 @@ def init_round_state(tc: TrainerConfig, params) -> RoundState:
         client_leaf_ts=(
             jnp.zeros((tc.num_round_clients, n_leaves), jnp.int32)
             if tc.per_tensor_fetch else None),
+        queue=(qlib.init_queue(
+            tc.queue_capacity, _queue_payload_example(tc, params),
+            n_leaves=n_leaves if tc.per_tensor_fetch else 0,
+            mask_like=params if tc.per_tensor_push else None)
+            if tc.queue_capacity else None),
     )
 
 
@@ -123,6 +153,53 @@ def build_round_step(
         f"per_tensor_push is undefined for synchronous rule {tc.rule!r}"
 
     rule = server_rules.get_rule(tc.rule)
+    use_queue = tc.queue_capacity > 0
+    if tc.queue_capacity < 0:
+        raise ValueError(
+            f"queue_capacity must be >= 0 (0 disables the queue), got "
+            f"{tc.queue_capacity}")
+    if tc.drain_policy not in qlib.DRAIN_POLICIES:
+        raise ValueError(
+            f"unknown drain_policy {tc.drain_policy!r}: expected one of "
+            f"{qlib.DRAIN_POLICIES}")
+    if tc.admission_policy not in qlib.ADMISSION_POLICIES:
+        raise ValueError(
+            f"unknown admission_policy {tc.admission_policy!r}: expected "
+            f"one of {qlib.ADMISSION_POLICIES}")
+    if use_queue:
+        if rule.synchronous:
+            raise ValueError(
+                f"queue_capacity > 0 is undefined for synchronous rule "
+                f"{tc.rule!r}: the barrier already buffers a full round "
+                f"server-side — use an async rule or queue_capacity=0")
+        if tc.drain_k < 1:
+            raise ValueError(f"drain_k must be >= 1, got {tc.drain_k}")
+        if (tc.drain_policy == "adaptive"
+                and not 0.0 < tc.drain_adaptive_gain <= 1.0):
+            raise ValueError(
+                f"drain_adaptive_gain must be in (0, 1], got "
+                f"{tc.drain_adaptive_gain}")
+        if tc.admission_policy == "block":
+            if tc.drain_policy != "drain_all":
+                raise ValueError(
+                    "admission_policy='block' models lossless backpressure "
+                    "— only sound when overflow is impossible: use "
+                    "drain_policy='drain_all', or admission "
+                    "'reject'/'drop_oldest' for a lossy loaded server")
+            if tc.queue_capacity < tc.num_round_clients:
+                raise ValueError(
+                    f"admission_policy='block' requires queue_capacity >= "
+                    f"num_round_clients (got {tc.queue_capacity} < "
+                    f"{tc.num_round_clients}): all C round pushes must fit "
+                    f"the drained-empty ring — raise queue_capacity or use "
+                    f"'reject'/'drop_oldest'")
+        if tc.fused_mode == "cotangent":
+            raise ValueError(
+                "fused_mode='cotangent' is not wired through the round "
+                "trainer's ingress queue (the round's minibatch would have "
+                "to be queued alongside each stale copy, as FRED does) — "
+                "use fused_mode='auto'/'materialized' with queue_capacity "
+                "> 0, or FRED for queued cotangent runs")
     batched_losses = batched_loss_fn
     if batched_losses is None:
         attached = getattr(grad_fn, "event_batched", None)
@@ -138,6 +215,7 @@ def build_round_step(
         and not tc.per_tensor_push and not tc.per_tensor_fetch
         and tc.drop_policy == "discard"
         and not tc.use_fused_kernel
+        and not use_queue
         and batched_losses is not None)
     if tc.fused_mode == "cotangent" and not use_cotangent:
         raise ValueError(
@@ -179,7 +257,65 @@ def build_round_step(
                 treedef, [state.client_leaf_ts[:, i]
                           for i in range(state.client_leaf_ts.shape[1])])
 
-        if use_cotangent:
+        queue = state.queue
+        admitted = push_event
+        if use_queue:
+            # --- admission: this round's pushes enter the bounded ring ---
+            payload = {"grad": grads}
+            if rule.needs_client_params:
+                payload["copy"] = state.client_params
+            arrivals = qlib.Arrivals(
+                payload=payload, ts=state.client_ts,
+                client=jnp.arange(C, dtype=jnp.int32), valid=push_event,
+                leaf_ts=(state.client_leaf_ts if tc.per_tensor_fetch
+                         else None),
+                leaf_mask=push if tc.per_tensor_push else None)
+            queue, admitted, n_rejected, n_dropped = qlib.enqueue(
+                state.queue, arrivals, tc.admission_policy,
+                state.server.timestamp)
+            depth_peak = queue.size
+            # only admitted pushes crossed the wire — override the
+            # gate-level byte estimate (a rejected push is refused before
+            # transmission and must not count as sent)
+            if tc.per_tensor_push:
+                push_sent = masked_bytes(
+                    jax.tree.map(lambda m: m & admitted, push),
+                    state.server.params)
+            else:
+                push_sent = (jnp.sum(admitted.astype(jnp.float32))
+                             * model_bytes)
+
+            # --- drain: apply the k_eff oldest queued pushes ---
+            k_eff = qlib.drain_count(
+                queue.size, tc.drain_policy,
+                drain_k=tc.drain_k, gain=tc.drain_adaptive_gain)
+            queue, qbatch = qlib.dequeue(queue, k_eff)
+            latency_sum = jnp.sum(jnp.where(
+                qbatch.valid,
+                (state.server.timestamp - qbatch.enq_T).astype(jnp.float32),
+                0.0))
+            if tc.per_tensor_fetch:
+                treedef = jax.tree.structure(state.server.params)
+                q_ts = jax.tree.unflatten(
+                    treedef, [qbatch.leaf_ts[:, i]
+                              for i in range(qbatch.leaf_ts.shape[1])])
+            else:
+                q_ts = qbatch.ts
+            q_push = (jax.tree.map(lambda m: m & qbatch.valid,
+                                   qbatch.leaf_mask)
+                      if tc.per_tensor_push else qbatch.valid)
+            q_cp = qbatch.payload.get("copy")
+            if apply_mode == "serial":
+                server, taus = engine.serial_apply(
+                    scfg, state.server, qbatch.payload["grad"], q_push,
+                    q_ts, q_cp)
+            else:
+                server, taus = engine.fused_apply(
+                    scfg, state.server, qbatch.payload["grad"], q_push,
+                    q_ts, client_params=q_cp)
+            mean_tau = (jnp.sum(qbatch.valid.astype(jnp.float32) * taus)
+                        / jnp.maximum(k_eff, 1))
+        elif use_cotangent:
             server, taus, losses = engine.fused_apply_cotangent(
                 scfg, state.server,
                 lambda W, deltas: batched_losses(W, deltas, batch),
@@ -192,6 +328,8 @@ def build_round_step(
             server, taus = engine.fused_apply(
                 scfg, state.server, grads, push, grad_ts,
                 state.client_params)
+        if not use_queue:
+            mean_tau = jnp.mean(taus)
 
         # --- fetch gates ---
         if tc.per_tensor_fetch:
@@ -219,11 +357,17 @@ def build_round_step(
             kept = jnp.where(p, cp, local)       # un-pushed grad applied locally
             return jnp.where(f, sp[None], kept)  # fetched clients get canonical
 
+        # with a queue, a push the admission policy refused behaves like a
+        # gated-out push on the client: it falls back to drop_policy
+        refresh_push = push
+        if use_queue:
+            refresh_push = (jax.tree.map(lambda m: m & admitted, push)
+                            if tc.per_tensor_push else admitted)
         n_leaves = len(jax.tree.leaves(server.params))
         g_leaves = (jax.tree.leaves(grads) if grads is not None
                     else [None] * n_leaves)
-        p_leaves = (jax.tree.leaves(push) if tc.per_tensor_push
-                    else [push] * n_leaves)
+        p_leaves = (jax.tree.leaves(refresh_push) if tc.per_tensor_push
+                    else [refresh_push] * n_leaves)
         f_leaves = (jax.tree.leaves(fmask) if tc.per_tensor_fetch
                     else [fetch] * n_leaves)
         treedef = jax.tree.structure(server.params)
@@ -240,26 +384,39 @@ def build_round_step(
                 [jnp.where(m, server.timestamp, state.client_leaf_ts[:, i])
                  for i, m in enumerate(jax.tree.leaves(fmask))], axis=1)
 
+        counters = engine.count_events(
+            state.counters, admitted, fetch,
+            push_bytes_sent=push_sent, push_bytes_total=C * model_bytes,
+            fetch_bytes_sent=fetch_sent,
+            fetch_bytes_total=C * model_bytes)
+        if use_queue:
+            counters = qlib.count_queue(
+                counters,
+                enqueued=jnp.sum(admitted.astype(jnp.int32)),
+                rejected=n_rejected, dropped=n_dropped, drained=k_eff,
+                depth_post=queue.size, depth_peak=depth_peak,
+                latency_sum=latency_sum)
         new_state = RoundState(
             server=server,
             client_params=client_params,
             client_ts=client_ts,
             round_idx=state.round_idx + 1,
-            counters=engine.count_events(
-                state.counters, push_event, fetch,
-                push_bytes_sent=push_sent, push_bytes_total=C * model_bytes,
-                fetch_bytes_sent=fetch_sent,
-                fetch_bytes_total=C * model_bytes),
+            counters=counters,
             client_leaf_ts=client_leaf_ts,
+            queue=queue,
         )
         metrics = {
             "loss": jnp.mean(losses),
             "loss_per_client": losses,
-            "mean_tau": jnp.mean(taus),
-            "pushes": jnp.sum(push_event.astype(jnp.int32)),
+            "mean_tau": mean_tau,
+            "pushes": jnp.sum(admitted.astype(jnp.int32)),
             "fetches": jnp.sum(fetch.astype(jnp.int32)),
             "timestamp": server.timestamp,
         }
+        if use_queue:
+            metrics.update(
+                queue_depth=queue.size, drained=k_eff,
+                rejected=n_rejected, dropped=n_dropped)
         return new_state, metrics
 
     return round_step

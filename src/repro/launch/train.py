@@ -60,6 +60,17 @@ def main():
                     help="gate each parameter tensor independently on both "
                          "directions (per-leaf eq. 9 + per-tensor staleness)")
     ap.add_argument("--variant", default="intent", choices=["intent", "literal"])
+    ap.add_argument("--queue-capacity", type=int, default=0,
+                    help="bounded server ingress queue (core/queue.py); "
+                         "0 = apply pushes immediately")
+    ap.add_argument("--drain-policy", default="drain_all",
+                    choices=["drain_all", "drain_k", "adaptive"],
+                    help="how many queued pushes each round applies")
+    ap.add_argument("--drain-k", type=int, default=1,
+                    help="per-round drain budget (drain_k; adaptive floor)")
+    ap.add_argument("--admission-policy", default="block",
+                    choices=["block", "reject", "drop_oldest"],
+                    help="what happens to a push arriving at a full queue")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -71,6 +82,8 @@ def main():
         num_round_clients=max(args.clients, 1), rule=args.rule, lr=args.lr,
         c_push=args.c_push, c_fetch=args.c_fetch, variant=args.variant,
         per_tensor_push=args.per_tensor, per_tensor_fetch=args.per_tensor,
+        queue_capacity=args.queue_capacity, drain_policy=args.drain_policy,
+        drain_k=args.drain_k, admission_policy=args.admission_policy,
         seed=args.seed,
     )
     mesh = make_host_mesh(data=len(jax.devices()))
@@ -121,6 +134,16 @@ def main():
                   f"{total / 2**20:.1f} MiB potential "
                   f"({sent / total:.1%} transmitted, "
                   f"{total / max(sent, 1e-9):.1f}x reduction)")
+        if args.queue_capacity:
+            w = max(int(cnt.queue_windows), 1)
+            print(f"[train] queue: {int(cnt.queue_drained)} drained / "
+                  f"{int(cnt.queue_enqueued)} admitted "
+                  f"({int(cnt.queue_rejected)} rejected, "
+                  f"{int(cnt.queue_dropped)} dropped), "
+                  f"mean depth {float(cnt.queue_depth_sum) / w:.2f}, "
+                  f"peak {int(cnt.queue_depth_peak)}, "
+                  f"mean latency "
+                  f"{float(cnt.queue_latency_sum) / max(int(cnt.queue_drained), 1):.2f} T-ticks")
     else:
         scfg = server_config(tc)
         state = server_rules.init(scfg, params)

@@ -54,6 +54,21 @@ batch is gathered through group representatives).  Then either
 Dropped pushes follow the paper's server-side gradient cache by default
 (`drop_policy='cache'`: re-apply that client's most recent transmitted
 gradient), or `'skip'` (no server update at that opportunity).
+
+**Bounded ingress queue** (``SimConfig.queue_capacity > 0``, `core/queue.py`):
+instead of applying each push the instant it arrives, arrivals are admitted
+into a fixed-capacity ring buffer and a drain policy decides how many queued
+events each server pass applies — the simulator then models a *loaded*
+parameter server whose backlog (and therefore staleness) grows when arrivals
+outpace application.  Each scan step is one *drain window*: K arrival events
+(dispatch → stale-copy gradient → eq.-9 push gate → admission), one drain
+(`serial_apply` / `fused_apply` / `fused_apply_cotangent` on the drained
+batch — queue-induced same-timestamp collisions feed `dedup_events` as the
+common case), then all K arriving clients run their fetch gates against the
+post-drain server.  With ``queue_capacity=1`` and ``drain_policy='drain_all'``
+this reduces bitwise to the immediate-apply path.  See
+``SimConfig.queue_capacity`` / ``drain_policy`` / ``admission_policy`` and
+docs/ARCHITECTURE.md §"Server ingress queue".
 """
 from __future__ import annotations
 
@@ -65,6 +80,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
+from repro.core import queue as qlib
 from repro.core import rules as server_rules
 from repro.core.bandwidth import BandwidthConfig, masked_bytes, tree_bytes
 from repro.core.engine import (
@@ -94,6 +110,13 @@ class SimConfig:
     # reduced (see module docstring); 'auto' takes the cotangent path
     # whenever the rule/bandwidth configuration is eligible.
     fused_mode: str = "auto"
+    # --- bounded server ingress queue (core/queue.py) ---
+    queue_capacity: int = 0       # 0 = immediate apply (no queue)
+    drain_policy: str = "drain_all"     # 'drain_all' | 'drain_k' | 'adaptive'
+    drain_k: int = 1              # per-window drain budget ('drain_k' floor
+                                  # of the 'adaptive' batch)
+    drain_adaptive_gain: float = 0.5    # 'adaptive': drain ceil(gain·depth)
+    admission_policy: str = "block"     # 'block' | 'reject' | 'drop_oldest'
 
     def cotangent_eligible(self) -> bool:
         """True iff the cotangent fused path can serve this configuration.
@@ -142,6 +165,61 @@ class SimConfig:
         if self.apply_mode == "fused":
             assert rule.supports_fused, \
                 f"rule {self.server.rule!r} does not support apply_mode='fused'"
+        # --- ingress-queue validation (clear errors, not silent misbehavior) ---
+        if self.queue_capacity < 0:
+            raise ValueError(
+                f"queue_capacity must be >= 0 (0 disables the queue), got "
+                f"{self.queue_capacity}")
+        if self.drain_policy not in qlib.DRAIN_POLICIES:
+            raise ValueError(
+                f"unknown drain_policy {self.drain_policy!r}: expected one "
+                f"of {qlib.DRAIN_POLICIES}")
+        if self.admission_policy not in qlib.ADMISSION_POLICIES:
+            raise ValueError(
+                f"unknown admission_policy {self.admission_policy!r}: "
+                f"expected one of {qlib.ADMISSION_POLICIES}")
+        if self.queue_capacity:
+            if rule.synchronous:
+                raise ValueError(
+                    f"queue_capacity > 0 is undefined for synchronous rule "
+                    f"{self.server.rule!r}: a barrier rule already buffers a "
+                    f"full round server-side, so an ingress queue in front of "
+                    f"the barrier would double-buffer the same gradients — "
+                    f"use an async rule or queue_capacity=0")
+            if self.drain_k < 1:
+                raise ValueError(
+                    f"drain_k must be >= 1, got {self.drain_k}")
+            if (self.drain_policy == "adaptive"
+                    and not 0.0 < self.drain_adaptive_gain <= 1.0):
+                raise ValueError(
+                    f"drain_adaptive_gain must be in (0, 1], got "
+                    f"{self.drain_adaptive_gain} (1.0 degenerates to "
+                    f"drain_all; <= 0 would never drain above the drain_k "
+                    f"floor)")
+            if (self.bandwidth.c_push > 0
+                    and self.bandwidth.drop_policy == "cache"):
+                raise ValueError(
+                    "drop_policy='cache' (server-side gradient cache) is "
+                    "incompatible with an ingress queue: a gated-out push "
+                    "never reaches the server, so there is no arrival to "
+                    "admit and no cached re-application slot at drain time "
+                    "— use drop_policy='skip' with queue_capacity > 0")
+            if self.admission_policy == "block":
+                if self.drain_policy != "drain_all":
+                    raise ValueError(
+                        "admission_policy='block' models lossless "
+                        "backpressure, which the fixed-shape scan can only "
+                        "honor when overflow is impossible (a blocked client "
+                        "cannot be suspended mid-window): use "
+                        "drain_policy='drain_all', or admission "
+                        "'reject'/'drop_oldest' for a lossy loaded server")
+                if self.queue_capacity < self.events_per_step:
+                    raise ValueError(
+                        f"admission_policy='block' requires queue_capacity "
+                        f">= events_per_step (got {self.queue_capacity} < "
+                        f"{self.events_per_step}): a full arrival window "
+                        f"must always fit the drained-empty ring — raise "
+                        f"queue_capacity or use 'reject'/'drop_oldest'")
 
 
 class SimState(NamedTuple):
@@ -155,6 +233,34 @@ class SimState(NamedTuple):
     # timestamp at which each TENSOR of each client's copy last synchronized
     # (maintained by both apply modes; per-leaf τ in serial AND fused).
     client_leaf_ts: Optional[jnp.ndarray] = None
+    # bounded server ingress queue (queue_capacity > 0; core/queue.py) —
+    # server-side state, replicated like the server itself.
+    queue: Optional[qlib.QueueState] = None
+
+
+def _queue_uses_cotangent(config: SimConfig) -> bool:
+    """True iff the queued fused path defers grads to a drain-time vjp."""
+    return (config.apply_mode == "fused"
+            and (config.fused_mode == "cotangent"
+                 or (config.fused_mode == "auto"
+                     and config.cotangent_eligible())))
+
+
+def _queue_payload_example(config: SimConfig, params):
+    """Single-event payload pytree the ingress queue stores per slot.
+
+    Materialized modes queue the gradient + its arrival loss (+ the stale
+    copy for gap-aware rules); the cotangent fused path instead queues the
+    stale copy + minibatch indices and defers the forward/backward to drain
+    time (the [K, P] gradient batch is never materialized, queued or not).
+    """
+    if _queue_uses_cotangent(config):
+        return {"copy": params,
+                "idx": jnp.zeros((config.batch_size,), jnp.int32)}
+    payload = {"grad": params, "loss": jnp.zeros((), jnp.float32)}
+    if server_rules.get_rule(config.server.rule).needs_client_params:
+        payload["copy"] = params
+    return payload
 
 
 def init_sim(config: SimConfig, params) -> SimState:
@@ -172,6 +278,12 @@ def init_sim(config: SimConfig, params) -> SimState:
         counters=engine.init_counters(),
         client_leaf_ts=(jnp.zeros((lam, len(jax.tree.leaves(params))), jnp.int32)
                         if config.bandwidth.per_tensor_fetch else None),
+        queue=(qlib.init_queue(
+            config.queue_capacity, _queue_payload_example(config, params),
+            n_leaves=(len(jax.tree.leaves(params))
+                      if config.bandwidth.per_tensor_fetch else 0),
+            mask_like=(params if config.bandwidth.per_tensor_push else None))
+            if config.queue_capacity else None),
     )
 
 
@@ -217,6 +329,222 @@ def _dispatch(config: SimConfig, rr_pos, key, het_logits):
     return jax.random.categorical(key, het_logits)
 
 
+def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
+                      batched_loss_fn=None):
+    """step(state, keys) for the queued protocol: one drain window per call.
+
+    K arrivals (dispatch → stale-copy gradient → eq.-9 push gate →
+    admission into the ring), one drain (the drained batch goes through the
+    configured engine apply path), then all K arriving clients run their
+    fetch gates against the post-drain server.  Serial arrivals compute
+    each gradient with the scalar `grad_fn` inside a `lax.scan` so the
+    ``queue_capacity=1`` / ``drain_all`` trajectory is bitwise the
+    immediate-apply serial path; fused arrivals vmap the gradients through
+    `dedup_events` representatives exactly like the unqueued fused step.
+    """
+    grad_fn = jax.value_and_grad(loss_fn)
+    bw = config.bandwidth
+    scfg = config.server
+    lam = config.num_clients
+    het_logits = _het_logits(config)
+    rule = server_rules.get_rule(scfg.rule)
+    use_cotangent = _queue_uses_cotangent(config)
+    batched_losses = (
+        engine.resolve_event_batched_loss(loss_fn, batched_loss_fn)
+        if use_cotangent else None)
+    vgrad = jax.vmap(grad_fn)
+
+    def step(state: SimState, keys):
+        ks = jax.vmap(lambda k: jax.random.split(k, 4))(keys)    # [K, 4, ...]
+        k_disp, k_batch = ks[:, 0], ks[:, 1]
+        k_push, k_fetch = ks[:, 2], ks[:, 3]
+        model_bytes = tree_bytes(state.server.params)
+
+        # --- dispatch K arrival events ---
+        if config.dispatcher == "roundrobin":
+            cs = (state.rr_pos + jnp.arange(K)) % lam
+        elif config.dispatcher == "uniform":
+            cs = jax.vmap(lambda k: jax.random.randint(k, (), 0, lam))(k_disp)
+        else:
+            cs = jax.vmap(
+                lambda k: jax.random.categorical(k, het_logits))(k_disp)
+        idx = jax.vmap(
+            lambda k: jax.random.randint(
+                k, (config.batch_size,), 0, data_x.shape[0]))(k_batch)
+
+        # --- push gates at arrival (pre-window server state); scalar draws
+        # per event (vmap) so the K=1 stream is bitwise the serial path ---
+        if bw.per_tensor_push:
+            push = jax.vmap(lambda k: engine.per_tensor_gate(
+                k, state.server, bw.c_push, bw.eps)[0])(k_push)  # leaves [K]
+            push_event = engine.any_leaf(push)                   # [K]
+        else:
+            push = push_event = jax.vmap(lambda k: engine.transmit_gate(
+                k, state.server, bw.c_push, bw.eps))(k_push)     # [K]
+
+        # stale-copy timestamps double as the dedup grouping key
+        dedup_key = (state.client_leaf_ts[cs] if bw.per_tensor_fetch
+                     else state.client_ts[cs])
+
+        # --- arrival-side gradient work → queue payload ---
+        if use_cotangent:
+            # queue the stale copies + minibatch indices; the forward and
+            # the cotangent backward both run at drain time
+            rep, _, _ = engine.dedup_events(dedup_key)
+            payload = {"copy": tree_index(state.client_params, cs[rep]),
+                       "idx": idx}
+        elif config.apply_mode == "fused":
+            rep, _, _ = engine.dedup_events(dedup_key)
+            p_e = tree_index(state.client_params, cs[rep])       # [K, ...]
+            losses, grads = vgrad(p_e, data_x[idx], data_y[idx])
+            payload = {"grad": grads, "loss": losses}
+            if rule.needs_client_params:
+                payload["copy"] = p_e
+        else:
+            # serial arrivals: scalar grad_fn per event (bitwise-faithful)
+            def one_arrival(carry, inp):
+                c, rows = inp
+                p_c = tree_index(state.client_params, c)
+                loss, g = grad_fn(p_c, data_x[rows], data_y[rows])
+                out = {"grad": g, "loss": loss}
+                if rule.needs_client_params:
+                    out["copy"] = p_c
+                return carry, out
+            _, payload = jax.lax.scan(one_arrival, 0, (cs, idx))
+
+        # --- admission ---
+        arrivals = qlib.Arrivals(
+            payload=payload, ts=state.client_ts[cs], client=cs,
+            valid=push_event,
+            leaf_ts=(dedup_key if bw.per_tensor_fetch else None),
+            leaf_mask=(push if bw.per_tensor_push else None))
+        queue, admitted, n_rejected, n_dropped = qlib.enqueue(
+            state.queue, arrivals, config.admission_policy,
+            state.server.timestamp)
+        depth_peak = queue.size
+        # bytes: only admitted pushes crossed the wire — a rejected push is
+        # refused at admission, before transmission (never counted as sent)
+        if bw.per_tensor_push:
+            push_sent = masked_bytes(
+                jax.tree.map(lambda m: m & admitted, push),
+                state.server.params)
+        else:
+            push_sent = jnp.sum(admitted.astype(jnp.float32)) * model_bytes
+
+        # --- drain: apply the k_eff oldest queued events in one pass ---
+        k_eff = qlib.drain_count(
+            queue.size, config.drain_policy,
+            drain_k=config.drain_k, gain=config.drain_adaptive_gain)
+        queue, batch = qlib.dequeue(queue, k_eff)
+        latency_sum = jnp.sum(jnp.where(
+            batch.valid,
+            (state.server.timestamp - batch.enq_T).astype(jnp.float32), 0.0))
+
+        if bw.per_tensor_fetch:
+            treedef = jax.tree.structure(state.server.params)
+            grad_ts = jax.tree.unflatten(
+                treedef, [batch.leaf_ts[:, i]
+                          for i in range(batch.leaf_ts.shape[1])])
+        else:
+            grad_ts = batch.ts
+        push_arg = (jax.tree.map(lambda m: m & batch.valid, batch.leaf_mask)
+                    if bw.per_tensor_push else batch.valid)
+        cp = batch.payload.get("copy") if rule.needs_client_params else None
+
+        if use_cotangent:
+            xb, yb = data_x[batch.payload["idx"]], data_y[batch.payload["idx"]]
+            new_server, taus, dlosses = engine.fused_apply_cotangent(
+                scfg, state.server,
+                lambda W, deltas: batched_losses(W, deltas, xb, yb),
+                batch.payload["copy"], push_arg, grad_ts)
+        elif config.apply_mode == "fused":
+            new_server, taus = engine.fused_apply(
+                scfg, state.server, batch.payload["grad"], push_arg, grad_ts,
+                client_params=cp)
+            dlosses = batch.payload["loss"]
+        else:
+            new_server, taus = engine.serial_apply(
+                scfg, state.server, batch.payload["grad"], push_arg, grad_ts,
+                cp)
+            dlosses = batch.payload["loss"]
+
+        # --- fetch gates: the K arriving clients sync against the
+        # post-drain server (scalar draws per event, like the push side) ---
+        if bw.per_tensor_fetch:
+            fmask = jax.vmap(lambda k: engine.per_tensor_gate(
+                k, new_server, bw.c_fetch, bw.eps)[0])(k_fetch)  # leaves [K]
+            fetch = jnp.stack(jax.tree.leaves(fmask)).all(axis=0)  # [K]
+            fetch_sent = masked_bytes(fmask, new_server.params)
+
+            def fetch_leaf(m, cl, sp):
+                i = jnp.where(m, cs, lam)            # dropped when ¬fetched
+                return cl.at[i].set(
+                    jnp.broadcast_to(sp[None], (K,) + sp.shape), mode="drop")
+            client_params = jax.tree.map(
+                fetch_leaf, fmask, state.client_params, new_server.params)
+            leaf_cols = []
+            for i, m in enumerate(jax.tree.leaves(fmask)):
+                rows = jnp.where(m, cs, lam)
+                leaf_cols.append(
+                    state.client_leaf_ts[:, i].at[rows].set(
+                        jnp.broadcast_to(new_server.timestamp, (K,)),
+                        mode="drop"))
+            client_leaf_ts = jnp.stack(leaf_cols, axis=1)
+        else:
+            fetch = jax.vmap(lambda k: engine.transmit_gate(
+                k, new_server, bw.c_fetch, bw.eps))(k_fetch)     # [K]
+            fetch_sent = jnp.sum(fetch.astype(jnp.float32)) * model_bytes
+            fidx = jnp.where(fetch, cs, lam)           # dropped when ¬fetch
+            client_params = jax.tree.map(
+                lambda cl, sp: cl.at[fidx].set(
+                    jnp.broadcast_to(sp[None], (K,) + sp.shape), mode="drop"),
+                state.client_params, new_server.params)
+            client_leaf_ts = state.client_leaf_ts
+        fetch_idx = jnp.where(fetch, cs, lam)
+        client_ts = state.client_ts.at[fetch_idx].set(
+            jnp.broadcast_to(new_server.timestamp, (K,)), mode="drop")
+
+        counters = engine.count_events(
+            state.counters, admitted, fetch,
+            push_bytes_sent=push_sent, push_bytes_total=K * model_bytes,
+            fetch_bytes_sent=fetch_sent, fetch_bytes_total=K * model_bytes)
+        counters = qlib.count_queue(
+            counters,
+            enqueued=jnp.sum(admitted.astype(jnp.int32)),
+            rejected=n_rejected, dropped=n_dropped, drained=k_eff,
+            depth_post=queue.size, depth_peak=depth_peak,
+            latency_sum=latency_sum)
+
+        new_state = SimState(
+            server=new_server,
+            client_params=client_params,
+            client_ts=client_ts,
+            grad_cache=None,       # 'cache' drop policy rejected with a queue
+            rr_pos=state.rr_pos + K,
+            counters=counters,
+            client_leaf_ts=client_leaf_ts,
+            queue=queue,
+        )
+        validf = batch.valid.astype(jnp.float32)
+        nz = jnp.maximum(k_eff, 1).astype(jnp.float32)
+        metrics = {
+            # per-window scalars: means over the drained (not arriving) events
+            "loss": jnp.sum(validf * dlosses) / nz,
+            "tau": jnp.sum(validf * taus) / nz,
+            "client": cs,
+            "pushed": push_event,
+            "fetched": fetch,
+            "queue_depth": queue.size,                 # post-drain backlog
+            "drained": k_eff,
+            "admitted": jnp.sum(admitted.astype(jnp.int32)),
+            "rejected": n_rejected,
+            "dropped": n_dropped,
+        }
+        return new_state, metrics
+
+    return step
+
+
 def build_step_fn(
     config: SimConfig,
     loss_fn: Callable,          # loss_fn(params, xb, yb) -> scalar
@@ -246,6 +574,17 @@ def build_step_fn(
     lam = config.num_clients
     K = events if events is not None else config.events_per_step
     het_logits = _het_logits(config)
+
+    if config.queue_capacity:
+        if mesh is not None:
+            raise ValueError(
+                "queue_capacity > 0 does not support a client-axis mesh: "
+                "the ring buffer is replicated server state and the "
+                "shard_map'd arrival gradients are not wired through it "
+                "yet — run the queued simulation unsharded")
+        return _build_queue_step(
+            config, loss_fn, data_x, data_y, K,
+            batched_loss_fn=batched_loss_fn)
 
     def event_body(state: SimState, key):
         """One client event — the paper's protocol, verbatim."""
@@ -610,11 +949,17 @@ def run_simulation(
             curve_steps.append(done)
             curve_cost.append(float(eval_jit(state.server.params)))
 
+    counters = jax.tree.map(float, state.counters._asdict())
+    if not config.queue_capacity:
+        # keep the immediate-apply output schema (and the goldens) stable:
+        # the queue telemetry only appears when a queue is configured
+        counters = {k: v for k, v in counters.items()
+                    if not k.startswith("queue_")}
     out = {
         "state": state,
         "steps": curve_steps,
         "val_cost": curve_cost,
-        "counters": jax.tree.map(float, state.counters._asdict()),
+        "counters": counters,
         "final_timestamp": int(state.server.timestamp),
     }
     if collect_step_metrics:

@@ -94,14 +94,19 @@ def test_serial_k_invariant_heterogeneous(setup):
                       batched["state"].server.params)
 
 
-def test_num_steps_honored_exactly(setup):
+@pytest.mark.parametrize("apply_mode", ["serial", "fused"])
+@pytest.mark.parametrize("steps,k", [(7, 1), (130, 1), (130, 8), (100, 16),
+                                     (7, 8)])
+def test_num_steps_honored_exactly(setup, steps, k, apply_mode):
     """Legacy bug: num_steps < eval_every ran eval_every events; the
-    remainder past the last eval chunk was silently dropped."""
-    for steps, k in ((7, 1), (130, 1), (130, 8)):
-        cfg = dataclasses.replace(_cfg("asgd"), events_per_step=k)
-        r = _run_steps(cfg, setup, steps)
-        assert r["final_timestamp"] == steps, (steps, k)
-        assert r["counters"]["push_potential"] == steps
+    remainder past the last eval chunk was silently dropped.  num_steps must
+    be exact for every events_per_step (including K ∤ num_steps remainders
+    and num_steps < K) in both apply modes."""
+    cfg = dataclasses.replace(_cfg("asgd"), events_per_step=k,
+                              apply_mode=apply_mode)
+    r = _run_steps(cfg, setup, steps)
+    assert r["final_timestamp"] == steps, (steps, k)
+    assert r["counters"]["push_potential"] == steps
 
 
 def _run_steps(cfg, setup, steps):
