@@ -100,6 +100,51 @@ SCHEMAS = {
             "adaptive_wins": "int",
         },
     },
+    "BENCH_scenarios.json": {
+        "preset": "str",              # core.scenarios.SCENARIO_PRESETS name
+        "model_sizes": ("list", "int"),
+        "batch_size": "int",
+        "lam": "int",
+        "kasync_k": "int",
+        "methodology": "str",
+        "quick": "bool",
+        "arms": ("list", {
+            "name": "str",            # asgd | fasgd_queue | kasync | ssgd
+            "rule": "str",
+            "lr": "number",
+            "queue": "bool",
+            "kasync_k": "int",        # 0 for non-kasync arms
+            "events": "int",
+            "curve_steps": ("list", "int"),
+            "wall": ("list", "number"),
+            "val_cost": ("list", "number"),
+            "final_wall": "number",
+            "final_cost": "number",
+            "host_s": "number",
+        }),
+        "summary": {
+            "target_cost": "number",
+            "wall_budget": "number",
+            # per-arm wall clock to reach target_cost (null = never);
+            # acceptance (full run): kasync and fasgd_queue each beat
+            # asgd, and kasync beats ssgd
+            "wall_to_target": {
+                "asgd": ("optional", "number"),
+                "fasgd_queue": ("optional", "number"),
+                "kasync": ("optional", "number"),
+                "ssgd": ("optional", "number"),
+            },
+            "cost_at_budget": {
+                "asgd": "number",
+                "fasgd_queue": "number",
+                "kasync": "number",
+                "ssgd": "number",
+            },
+            "kasync_beats_asgd": "bool",
+            "fasgd_queue_beats_asgd": "bool",
+            "kasync_beats_ssgd": "bool",
+        },
+    },
     "BENCH_fig3_bandwidth.json": {
         "quick": "bool",
         "steps": "int",

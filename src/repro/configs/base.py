@@ -2,7 +2,12 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING, Optional
+
 import jax.numpy as jnp
+
+if TYPE_CHECKING:  # avoid configs -> core -> configs import cycle
+    from repro.core.scenarios import ScenarioConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,4 +161,13 @@ class TrainerConfig:
     drain_k: int = 1
     drain_adaptive_gain: float = 0.5
     admission_policy: str = "block"
+    # --- scenario-lite wall clock (core/scenarios.py) ---
+    # A ScenarioConfig gives each round a modeled duration: the C clients
+    # draw per-round service times from per-client streams, gradients apply
+    # in arrival (fastest-first) order, and the round's wall cost is the
+    # barrier_k-th order statistic (K-async partial barrier) or t_(C) for a
+    # full round.  Churn/elastic knobs are FRED-only — the round trainer's
+    # fleet is a fixed SPMD program (build_round_step raises).
+    scenario: Optional[ScenarioConfig] = None
+    kasync_k: int = 0                  # kasync partial-barrier K (0 → C)
     seed: int = 0

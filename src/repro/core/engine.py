@@ -129,6 +129,12 @@ class Counters(NamedTuple):
     a push the admission policy rejects is refused before transmission and
     must never be double-counted as sent bytes.
 
+    The `wall_clock` / `scenario_*` fields carry the modeled wall-clock axis
+    (`core/scenarios.py`, folded in by `scenarios.count_scenario` /
+    `scenarios.advance_wall`) and stay zero when no scenario is configured.
+    Every field is documented with its mode matrix in the "Counters
+    telemetry glossary" of docs/ARCHITECTURE.md.
+
     No jnp defaults here on purpose: NamedTuple defaults are evaluated at
     module import, which would stage device ops before the caller configures
     jax — use `init_counters()`.
@@ -151,6 +157,14 @@ class Counters(NamedTuple):
     queue_depth_peak: jnp.ndarray   # int32 — max post-admission depth
     queue_latency_sum: jnp.ndarray  # float32 — Σ admission→drain T-ticks
     queue_windows: jnp.ndarray      # int32 — drain windows accumulated
+    # modeled wall-clock / scenario telemetry (core/scenarios.py; zero when
+    # no scenario is configured — see docs/SCENARIOS.md)
+    wall_clock: jnp.ndarray          # float32 — latest modeled wall time
+    scenario_dropouts: jnp.ndarray   # int32 — clients lost to churn
+    scenario_rejoins: jnp.ndarray    # int32 — clients recovered by churn
+    scenario_active_sum: jnp.ndarray  # float32 — Σ active clients per window
+    scenario_windows: jnp.ndarray    # int32 — scenario windows accumulated
+    queue_latency_wall_sum: jnp.ndarray  # float32 — Σ admission→drain wall
 
 
 def init_counters() -> Counters:
@@ -158,7 +172,8 @@ def init_counters() -> Counters:
     zero = jnp.zeros((), jnp.int32)
     zf = jnp.zeros((), jnp.float32)
     return Counters(zero, zero, zero, zero, zf, zf, zf, zf,
-                    zero, zero, zero, zero, zf, zero, zf, zero)
+                    zero, zero, zero, zero, zf, zero, zf, zero,
+                    zf, zero, zero, zf, zero, zf)
 
 
 def _acc_bytes(prev, amount):

@@ -70,6 +70,8 @@ class QueueState(NamedTuple):
     # per-tensor (§5) extension: per-leaf timestamps / push masks
     leaf_ts: Optional[jnp.ndarray] = None    # [capacity, n_leaves] int32
     leaf_mask: Optional[Any] = None          # pytree of [capacity] bool
+    # scenario extension: modeled wall time at admission (docs/SCENARIOS.md)
+    enq_wall: Optional[jnp.ndarray] = None   # [capacity] float32
 
     @property
     def capacity(self) -> int:
@@ -92,6 +94,7 @@ class Arrivals(NamedTuple):
     valid: jnp.ndarray            # [K] bool
     leaf_ts: Optional[jnp.ndarray] = None    # [K, n_leaves] int32
     leaf_mask: Optional[Any] = None          # pytree of [K] bool
+    wall: Optional[jnp.ndarray] = None       # [K] float32 — arrival wall time
 
 
 class Drained(NamedTuple):
@@ -110,6 +113,7 @@ class Drained(NamedTuple):
     valid: jnp.ndarray            # [capacity] bool
     leaf_ts: Optional[jnp.ndarray] = None
     leaf_mask: Optional[Any] = None
+    enq_wall: Optional[jnp.ndarray] = None   # [capacity] float32
 
 
 ADMISSION_POLICIES = ("block", "reject", "drop_oldest")
@@ -117,14 +121,16 @@ DRAIN_POLICIES = ("drain_all", "drain_k", "adaptive")
 
 
 def init_queue(capacity: int, payload_example, *, n_leaves: int = 0,
-               mask_like=None) -> QueueState:
+               mask_like=None, track_wall: bool = False) -> QueueState:
     """An empty ring of `capacity` slots.
 
     `payload_example` is a single-event pytree (no leading event axis)
     fixing the payload structure/shapes/dtypes; slots start zeroed.
     `n_leaves > 0` allocates the per-tensor timestamp matrix
     (``leaf_ts [capacity, n_leaves]``); `mask_like` (a params-like pytree)
-    allocates the per-leaf push-mask pytree (``leaf_mask``).
+    allocates the per-leaf push-mask pytree (``leaf_mask``); `track_wall`
+    allocates the modeled-wall-time admission stamps used for scenario
+    queueing-latency telemetry (``enq_wall``, docs/SCENARIOS.md).
     """
     assert capacity >= 1, capacity
     return QueueState(
@@ -142,6 +148,8 @@ def init_queue(capacity: int, payload_example, *, n_leaves: int = 0,
         leaf_mask=(jax.tree.map(
             lambda _: jnp.zeros((capacity,), bool), mask_like)
             if mask_like is not None else None),
+        enq_wall=(jnp.zeros((capacity,), jnp.float32)
+                  if track_wall else None),
     )
 
 
@@ -209,6 +217,9 @@ def enqueue(q: QueueState, arrivals: Arrivals, admission: str, enq_T):
                  else put(q.leaf_ts, arrivals.leaf_ts.astype(jnp.int32))),
         leaf_mask=(None if q.leaf_mask is None
                    else jax.tree.map(put, q.leaf_mask, arrivals.leaf_mask)),
+        enq_wall=(None if q.enq_wall is None
+                  else put(q.enq_wall,
+                           arrivals.wall.astype(jnp.float32))),
     )
     return q, admitted, n_rejected, n_dropped
 
@@ -255,20 +266,28 @@ def dequeue(q: QueueState, k):
         leaf_ts=None if q.leaf_ts is None else q.leaf_ts[slot],
         leaf_mask=(None if q.leaf_mask is None
                    else jax.tree.map(lambda m: m[slot], q.leaf_mask)),
+        enq_wall=None if q.enq_wall is None else q.enq_wall[slot],
     )
     return q._replace(head=(q.head + k) % cap, size=q.size - k), batch
 
 
 def count_queue(counters: Counters, *, enqueued, rejected, dropped, drained,
-                depth_post, depth_peak, latency_sum) -> Counters:
+                depth_post, depth_peak, latency_sum,
+                latency_wall_sum=None) -> Counters:
     """Fold one drain window into the queue fields of the engine `Counters`.
 
     `depth_post` is the post-drain backlog (its running sum over
     ``queue_windows`` windows is the mean standing depth); `depth_peak` the
     post-admission depth (its running max is the high-water mark);
     `latency_sum` the summed admission→drain latency of this window's
-    drained events, in server-timestamp ticks.
+    drained events, in server-timestamp ticks.  `latency_wall_sum` carries
+    the same latency in modeled wall units when a scenario stamps arrivals
+    (`QueueState.enq_wall`); None leaves the wall counter untouched.
     """
+    if latency_wall_sum is not None:
+        counters = counters._replace(
+            queue_latency_wall_sum=counters.queue_latency_wall_sum
+            + jnp.asarray(latency_wall_sum, jnp.float32))
     return counters._replace(
         queue_enqueued=counters.queue_enqueued
         + jnp.asarray(enqueued, jnp.int32),

@@ -46,6 +46,16 @@ The cotangent fused path is not wired through the round trainer's queue
 (it would need the round's minibatch queued alongside each stale copy, as
 FRED does); ``fused_mode='auto'`` falls back to the materialized reduction
 and an explicit ``'cotangent'`` with a queue is rejected.
+
+**Scenario-lite wall clock** (``TrainerConfig.scenario``,
+`core/scenarios.py`): each round the C clients draw modeled service times
+from per-client streams keyed by ``(seed, client, round_idx)``; the server
+applies pushes in arrival (fastest-first) order, so a partial-barrier rule
+(``'kasync'``) accepts the fastest K clients, and the round's wall cost is
+the ``barrier_k``-th order statistic of the draws (t_(C) for a full
+barrier or an async rule).  Churn/elastic scenario knobs are FRED-only —
+the round trainer's fleet is a fixed SPMD program (`build_round_step`
+raises).  See docs/SCENARIOS.md.
 """
 from __future__ import annotations
 
@@ -58,6 +68,7 @@ from repro.configs.base import TrainerConfig
 from repro.core import engine
 from repro.core import queue as qlib
 from repro.core import rules as server_rules
+from repro.core import scenarios as scen
 from repro.core.bandwidth import masked_bytes, tree_bytes
 from repro.core.engine import Counters
 from repro.core.rules import ServerConfig, ServerState
@@ -85,6 +96,7 @@ def server_config(tc: TrainerConfig) -> ServerConfig:
         kappa=tc.kappa, poly_power=tc.poly_power,
         variant=tc.variant, num_clients=tc.num_round_clients,
         use_fused_kernel=tc.use_fused_kernel,
+        kasync_k=tc.kasync_k,
     )
 
 
@@ -200,6 +212,16 @@ def build_round_step(
                 "to be queued alongside each stale copy, as FRED does) — "
                 "use fused_mode='auto'/'materialized' with queue_capacity "
                 "> 0, or FRED for queued cotangent runs")
+    use_scenario = tc.scenario is not None
+    if use_scenario:
+        if tc.scenario.has_churn():
+            raise ValueError(
+                "churn/elastic scenario knobs (dropout_rate, rejoin_rate, "
+                "initial_active_frac < 1, resize_at) are FRED-only: the "
+                "round trainer's fleet is a fixed SPMD program — use "
+                "sim.fred for churny fleets, or a pure service-time "
+                "scenario (e.g. 'stragglers', 'hotspot') here")
+        scen.client_scales(tc.scenario, tc.num_round_clients)  # validate
     batched_losses = batched_loss_fn
     if batched_losses is None:
         attached = getattr(grad_fn, "event_batched", None)
@@ -228,6 +250,15 @@ def build_round_step(
         k_push, k_fetch = jax.random.split(key)
         C = tc.num_round_clients
         model_bytes = tree_bytes(state.server.params)
+
+        # --- scenario-lite wall clock: per-round [C] service draws ---
+        # The server sees this round's pushes in arrival (fastest-first)
+        # order, so a partial-barrier rule (kasync) accepts the fastest K;
+        # the round's wall cost is the k-th order statistic of the draws.
+        svc = svc_order = None
+        if use_scenario:
+            svc = scen.round_service_times(tc.scenario, C, state.round_idx)
+            svc_order = jnp.argsort(svc)
 
         if not use_cotangent:
             losses, grads = jax.vmap(grad_fn)(state.client_params, batch)
@@ -270,9 +301,17 @@ def build_round_step(
                 leaf_ts=(state.client_leaf_ts if tc.per_tensor_fetch
                          else None),
                 leaf_mask=push if tc.per_tensor_push else None)
+            if svc_order is not None:
+                # ring order = arrival order: fastest clients enqueue (and
+                # under a lossy admission policy, survive) first
+                arrivals = jax.tree.map(lambda a: a[svc_order], arrivals)
             queue, admitted, n_rejected, n_dropped = qlib.enqueue(
                 state.queue, arrivals, tc.admission_policy,
                 state.server.timestamp)
+            if svc_order is not None:
+                # back to client order — downstream consumers (refresh,
+                # byte accounting) index `admitted` by client
+                admitted = admitted[jnp.argsort(svc_order)]
             depth_peak = queue.size
             # only admitted pushes crossed the wire — override the
             # gate-level byte estimate (a rejected push is refused before
@@ -321,9 +360,13 @@ def build_round_step(
                 lambda W, deltas: batched_losses(W, deltas, batch),
                 state.client_params, push, grad_ts)
         elif apply_mode == "serial":
+            g_srv, p_srv, t_srv, cp_srv = (
+                grads, push, grad_ts, state.client_params)
+            if svc_order is not None:
+                g_srv, p_srv, t_srv, cp_srv = jax.tree.map(
+                    lambda a: a[svc_order], (g_srv, p_srv, t_srv, cp_srv))
             server, taus = engine.serial_apply(
-                scfg, state.server, grads, push, grad_ts,
-                state.client_params)
+                scfg, state.server, g_srv, p_srv, t_srv, cp_srv)
         else:
             server, taus = engine.fused_apply(
                 scfg, state.server, grads, push, grad_ts,
@@ -396,6 +439,12 @@ def build_round_step(
                 rejected=n_rejected, dropped=n_dropped, drained=k_eff,
                 depth_post=queue.size, depth_peak=depth_peak,
                 latency_sum=latency_sum)
+        if use_scenario:
+            # a sync rule's round ends at its partial barrier (the K-th
+            # arrival); an async round is charged the full straggler t_(C)
+            k_used = rule.barrier_k(scfg) if rule.synchronous else C
+            round_dt = jnp.sort(svc)[k_used - 1]
+            counters = scen.advance_wall(counters, round_dt, active_count=C)
         new_state = RoundState(
             server=server,
             client_params=client_params,
@@ -417,6 +466,8 @@ def build_round_step(
             metrics.update(
                 queue_depth=queue.size, drained=k_eff,
                 rejected=n_rejected, dropped=n_dropped)
+        if use_scenario:
+            metrics.update(wall=counters.wall_clock, round_dt=round_dt)
         return new_state, metrics
 
     return round_step

@@ -97,10 +97,17 @@ class ServerConfig:
     track_stats: bool = True    # maintain n/b/v even for non-FASGD rules
     num_clients: int = 1        # ssgd needs to know when a round is complete
     use_fused_kernel: bool = False  # route updates through a rule's Pallas op
+    kasync_k: int = 0           # kasync partial-barrier K (0 → num_clients)
 
     def __post_init__(self):
         get_rule(self.rule)     # raises KeyError for unregistered names
         assert self.variant in ("intent", "literal"), self.variant
+        if self.kasync_k < 0:
+            raise ValueError(f"kasync_k={self.kasync_k} must be >= 0")
+        if self.kasync_k > max(self.num_clients, 1):
+            raise ValueError(
+                f"kasync_k={self.kasync_k} exceeds num_clients="
+                f"{self.num_clients} (set num_clients to the fleet size)")
 
 
 class ServerState(NamedTuple):
@@ -263,6 +270,17 @@ class UpdateRule:
     # for fasgd (scale is elementwise in v, eq. 7) and gap (scale needs the
     # per-leaf parameter gap).
     coeffs_are_v_independent: bool = False
+
+    def barrier_k(self, config: ServerConfig) -> int:
+        """Round size K of a synchronous rule's (partial) barrier.
+
+        The number of arrivals per round the rule actually waits for: λ for
+        a full barrier (ssgd), ``kasync_k`` for the K-async partial barrier.
+        Scenario wall-clock accounting advances a synchronous round by the
+        K-th order statistic of the per-client service times
+        (`scenarios.sync_round`); async rules never call this.
+        """
+        return max(config.num_clients, 1)
 
     def fused_coeffs(self, config: ServerConfig, taus):
         """Per-event scalar effective lr [K] for `batched_pallas_mode='coeff'`.
@@ -526,6 +544,86 @@ class SsgdRule(UpdateRule):
         )
         if config.track_stats:
             new_state = self.update_stats(config, new_state, grad)
+        return new_state, {"tau": tau_scalar, "applied": full}
+
+
+@register_rule("kasync")
+class KAsyncRule(UpdateRule):
+    """K-async partial barrier (Dutta et al., arXiv:1803.01113 §3).
+
+    The sync↔async midpoint: each round waits for the fastest
+    K = ``config.kasync_k`` of the λ = ``config.num_clients`` arrivals and
+    steps θ ← θ − α·(Σ g)/K; the remaining λ − K arrivals of the round are
+    *discarded* (Dutta et al.'s cancellation semantics — the stragglers'
+    gradients are dropped, not buffered).  ``kasync_k = 0`` means K = λ,
+    which is bitwise-identical to `ssgd` (property-tested); K = 1
+    approaches the async limit while keeping zero-staleness updates.
+
+    A round is a window of λ consecutive arrivals tracked by the ``seen``
+    cursor; the first K pushed gradients of each window are accumulated and
+    the rest ignored (under a scenario, `scenarios.sync_round` delivers
+    arrivals fastest-first, so "first K" = "fastest K").  The wall clock of
+    a round is the K-th order statistic of the service times — the whole
+    point of the rule: E[t₍ₖ₎] ≪ E[t₍λ₎] under heavy-tailed stragglers.
+    """
+
+    synchronous = True
+    supports_fused = False
+
+    def _k(self, config: ServerConfig) -> int:
+        return config.kasync_k or max(config.num_clients, 1)
+
+    def barrier_k(self, config: ServerConfig) -> int:
+        """Partial-barrier round size K (``kasync_k``, 0 → λ)."""
+        return self._k(config)
+
+    def init_extra_state(self, config, params):
+        """Pending buffer + taken-count + round-arrival cursor ``seen``."""
+        return {"pending": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32),
+                "seen": jnp.zeros((), jnp.int32)}
+
+    def scale_leaf(self, config, v, tau, extra=None, gap=None):
+        """α/K broadcast over the leaf (the per-round mean over the K kept)."""
+        return jnp.full(_bshape(v, tau), config.lr / self._k(config),
+                        jnp.float32)
+
+    def apply(self, config, state, grad, tau, tau_scalar, client_params=None):
+        """Accumulate the first K arrivals of the round; discard the rest."""
+        k = self._k(config)
+        lam = max(config.num_clients, 1)
+        take = state.extra["seen"] < k
+        pending = jax.tree.map(
+            lambda acc, g: jnp.where(take, acc + g, acc),
+            state.extra["pending"], grad)
+        count = state.extra["count"] + take.astype(jnp.int32)
+        full = count >= k
+
+        def do_apply(_):
+            new_params = jax.tree.map(
+                lambda p, s: p - config.lr * s / k,
+                state.params,
+                pending,
+            )
+            return (new_params, jax.tree.map(jnp.zeros_like, pending),
+                    jnp.zeros((), jnp.int32), state.timestamp + 1)
+
+        def no_apply(_):
+            return state.params, pending, count, state.timestamp
+
+        params, pending, count, ts = jax.lax.cond(full, do_apply, no_apply, None)
+        seen = jnp.where(state.extra["seen"] + 1 >= lam,
+                         jnp.zeros((), jnp.int32), state.extra["seen"] + 1)
+        new_state = state._replace(
+            params=params, timestamp=ts,
+            extra={"pending": pending, "count": count, "seen": seen},
+        )
+        if config.track_stats:
+            # Discarded arrivals leave the eq. 4-6 statistics untouched too:
+            # a cancelled gradient never reached the server.
+            tracked = self.update_stats(config, new_state, grad)
+            new_state = jax.tree.map(
+                lambda a, b: jnp.where(take, a, b), tracked, new_state)
         return new_state, {"tau": tau_scalar, "applied": full}
 
 

@@ -1,0 +1,406 @@
+"""Modeled arrival-time processes for fault-tolerance / elasticity scenarios.
+
+FRED's default arrival model is "K events per scan window, client picked by
+the dispatcher" — a clean fleet with a unit event clock.  This module
+replaces that with a *discrete-event* arrival process over a fleet of λ
+clients, carried as pure pytree state inside the `lax.scan` carry (so
+λ=1024 fleets still jit/shard_map):
+
+* **service-time model** — each client c draws i.i.d. service times from a
+  fixed / lognormal / Pareto distribution with per-client mean ``scale[c]``
+  (`client_scales`): *stragglers* get ``scale × straggler_slowdown``
+  (heavy-tailed when combined with Pareto), *hotspots* get
+  ``scale / hotspot_speedup`` and therefore dominate event traffic;
+* **dropout / rejoin churn** — per scan window, every live client drops
+  with hazard ``dropout_rate`` and every dropped client rejoins with hazard
+  ``rejoin_rate`` (restarting its computation from the current wall time);
+* **elastic resize** — the fleet runs with ``initial_active_frac·λ``
+  clients until wall time ``resize_at``, then resizes to
+  ``resize_to_frac·λ`` (newly activated clients start fresh draws);
+* **wall clock** — `ScenarioState.now` advances to each event's modeled
+  finish time, giving every benchmark an error-vs-wall-clock axis next to
+  error-vs-events (Dutta et al., arXiv:1803.01113).
+
+Determinism and isolation: every service / churn draw for client c comes
+from its own counter-indexed stream ``fold_in(fold_in(base, c), n)`` where
+``n`` is the client's private draw counter (`ScenarioState.n_draws`) or the
+window index.  Client i dropping out therefore never perturbs client j's
+arrival times or churn coin flips — the invariant behind the dropout
+property tests (tests/test_scenarios.py).
+
+Two arrival modes feed the engine:
+
+* `async_window` (async rules) — a K-step argmin scan over per-client
+  next-finish times: the globally earliest active client fires, its finish
+  time becomes the wall clock, and it immediately redraws its next service
+  time.  Fast clients fire many times per window; stragglers rarely.
+* `sync_round` (synchronous rules, e.g. ``ssgd`` / ``kasync``) — all λ
+  clients draw one service time per round; arrivals are sorted ascending
+  (fastest first) and the wall clock advances by the ``k_used``-th order
+  statistic t₍ₖ₎ — the partial-barrier time of K-async, or t₍λ₎ for a full
+  barrier (Dutta et al. §3).
+
+See docs/SCENARIOS.md for the model reference and derivations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_SERVICE_KINDS = ("fixed", "lognormal", "pareto")
+_SVC_SALT = 0x5E11CE    # service-time stream salt
+_CHURN_SALT = 0xC4192   # dropout/rejoin stream salt
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Arrival-process model for one simulated fleet (docs/SCENARIOS.md).
+
+    All fractions are of the fleet size λ (resolved at trace time, so the
+    same config serves any λ); all times are in modeled wall units where a
+    nominal client's mean service time is ``mean_service``.
+    """
+
+    service: str = "lognormal"      # 'fixed' | 'lognormal' | 'pareto'
+    mean_service: float = 1.0       # mean service time of a nominal client
+    sigma: float = 0.5              # lognormal shape (ignored otherwise)
+    pareto_alpha: float = 1.5       # Pareto tail index (> 1 for finite mean)
+    straggler_frac: float = 0.0     # last ⌈frac·λ⌉ clients are stragglers
+    straggler_slowdown: float = 1.0  # straggler mean = mean_service × slowdown
+    hotspot_frac: float = 0.0       # first ⌈frac·λ⌉ clients are hotspots
+    hotspot_speedup: float = 1.0    # hotspot mean = mean_service / speedup
+    dropout_rate: float = 0.0       # per-window per-client dropout hazard
+    rejoin_rate: float = 0.0        # per-window per-client rejoin hazard
+    initial_active_frac: float = 1.0  # fleet fraction active at t = 0
+    resize_at: float = 0.0          # wall time of the elastic resize (0: never)
+    resize_to_frac: float = 1.0     # fleet fraction active after the resize
+    seed: int = 0                   # base of all scenario RNG streams
+
+    def __post_init__(self):
+        if self.service not in _SERVICE_KINDS:
+            raise ValueError(
+                f"service {self.service!r} not in {_SERVICE_KINDS}")
+        if not self.mean_service > 0:
+            raise ValueError("mean_service must be > 0")
+        if not self.pareto_alpha > 1:
+            raise ValueError(
+                "pareto_alpha must be > 1 (finite-mean normalization)")
+        for name in ("straggler_frac", "hotspot_frac", "dropout_rate",
+                     "rejoin_rate", "initial_active_frac", "resize_to_frac"):
+            val = getattr(self, name)
+            if not 0.0 <= val <= 1.0:
+                raise ValueError(f"{name}={val} outside [0, 1]")
+        if self.straggler_slowdown < 1.0 or self.hotspot_speedup < 1.0:
+            raise ValueError("slowdown/speedup factors must be >= 1")
+        if self.resize_at < 0:
+            raise ValueError("resize_at must be >= 0")
+
+    def has_churn(self) -> bool:
+        """True when the fleet composition can change mid-run (dropout,
+        rejoin, or an elastic resize) — incompatible with barrier rules."""
+        return (self.dropout_rate > 0 or self.rejoin_rate > 0
+                or self.initial_active_frac < 1.0 or self.resize_at > 0)
+
+
+#: Named operating points used by ``train.py --scenario`` and the docs.
+SCENARIO_PRESETS: Dict[str, ScenarioConfig] = {
+    # Heavy-tailed stragglers: 1/8 of the fleet runs 16x slower, with a
+    # Pareto(α=1.3) tail on every service time — the regime where naive
+    # async staleness explodes (Dutta et al. §5).
+    "stragglers": ScenarioConfig(
+        service="pareto", pareto_alpha=1.3,
+        straggler_frac=0.125, straggler_slowdown=16.0),
+    # Churny fleet: every window each live client drops w.p. 2% and each
+    # dropped client rejoins w.p. 5% (steady state ~28% dark).
+    "dropout": ScenarioConfig(
+        service="lognormal", dropout_rate=0.02, rejoin_rate=0.05),
+    # Hotspots: 1/16 of the fleet runs 8x faster and dominates traffic.
+    "hotspot": ScenarioConfig(
+        service="lognormal", hotspot_frac=0.0625, hotspot_speedup=8.0),
+    # Elastic resize: half the fleet until t=8, then scale out to full.
+    "elastic": ScenarioConfig(
+        service="lognormal", initial_active_frac=0.5,
+        resize_at=8.0, resize_to_frac=1.0),
+}
+
+
+def preset(name: str) -> ScenarioConfig:
+    """Look up a named `ScenarioConfig` preset (KeyError with the listing)."""
+    try:
+        return SCENARIO_PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; presets: "
+            f"{tuple(sorted(SCENARIO_PRESETS))}") from None
+
+
+class ScenarioState(NamedTuple):
+    """Arrival-process state carried through the scan (all shapes static).
+
+    ``next_t[c]`` is the modeled finish time of client c's in-flight
+    computation (+inf for clients that have never been activated);
+    ``n_draws[c]`` counts client c's consumed service draws and indexes its
+    private RNG stream.
+    """
+
+    now: jnp.ndarray        # f32 scalar — modeled wall clock
+    next_t: jnp.ndarray     # f32 [λ]   — per-client next finish time
+    n_draws: jnp.ndarray    # i32 [λ]   — per-client service-draw counter
+    dropped: jnp.ndarray    # bool [λ]  — churn state (True = dark)
+    window: jnp.ndarray     # i32 scalar — churn-stream window index
+
+
+def _svc_base(config: ScenarioConfig):
+    return jax.random.fold_in(jax.random.PRNGKey(config.seed), _SVC_SALT)
+
+
+def _churn_base(config: ScenarioConfig):
+    return jax.random.fold_in(jax.random.PRNGKey(config.seed), _CHURN_SALT)
+
+
+def _service_time(config: ScenarioConfig, key, scale):
+    """One service draw with mean ``scale`` (broadcastable, f32)."""
+    scale = jnp.asarray(scale, jnp.float32)
+    if config.service == "fixed":
+        return scale
+    if config.service == "lognormal":
+        # E[scale·exp(σz − σ²/2)] = scale
+        z = jax.random.normal(key)
+        s = config.sigma
+        return scale * jnp.exp(s * z - 0.5 * s * s)
+    # pareto: x_m · X with X ~ Pareto(α) on [1, ∞), E[X] = α/(α−1);
+    # x_m = scale·(α−1)/α normalizes the mean to scale.
+    a = config.pareto_alpha
+    x = jax.random.pareto(key, a)
+    return scale * (a - 1.0) / a * x
+
+
+def _draw_all(config: ScenarioConfig, scales, n_draws):
+    """Vectorized per-client service draws at each client's stream index."""
+    base = _svc_base(config)
+
+    def one(c, n, scale):
+        key = jax.random.fold_in(jax.random.fold_in(base, c), n)
+        return _service_time(config, key, scale)
+
+    lam = scales.shape[0]
+    return jax.vmap(one)(jnp.arange(lam, dtype=jnp.int32), n_draws, scales)
+
+
+def client_scales(config: ScenarioConfig, num_clients: int) -> jnp.ndarray:
+    """Static per-client mean service times [λ] (hotspots first, stragglers
+    last; deterministic index assignment so runs are config-reproducible)."""
+    lam = int(num_clients)
+    n_hot = int(round(config.hotspot_frac * lam))
+    n_strag = int(round(config.straggler_frac * lam))
+    if n_hot + n_strag > lam:
+        raise ValueError(
+            f"hotspot_frac + straggler_frac cover {n_hot + n_strag} > "
+            f"{lam} clients")
+    scales = jnp.full((lam,), config.mean_service, jnp.float32)
+    if n_hot:
+        scales = scales.at[:n_hot].divide(config.hotspot_speedup)
+    if n_strag:
+        scales = scales.at[lam - n_strag:].multiply(config.straggler_slowdown)
+    return scales
+
+
+def _base_size(config: ScenarioConfig, lam: int, now) -> jnp.ndarray:
+    """Elastic fleet size at wall time ``now`` (i32 scalar, >= 1)."""
+    n0 = max(1, int(round(config.initial_active_frac * lam)))
+    if config.resize_at <= 0:
+        return jnp.asarray(n0, jnp.int32)
+    n1 = max(1, int(round(config.resize_to_frac * lam)))
+    return jnp.where(now >= config.resize_at, n1, n0).astype(jnp.int32)
+
+
+def _base_mask(config: ScenarioConfig, lam: int, now) -> jnp.ndarray:
+    """Bool [λ] elastic membership mask (first `_base_size` clients)."""
+    return jnp.arange(lam, dtype=jnp.int32) < _base_size(config, lam, now)
+
+
+def init_scenario(config: ScenarioConfig, num_clients: int) -> ScenarioState:
+    """Initial `ScenarioState`: the initial fleet starts one draw each;
+    parked clients carry ``next_t = +inf`` until elastically activated."""
+    lam = int(num_clients)
+    scales = client_scales(config, lam)
+    base = _base_mask(config, lam, jnp.float32(0.0))
+    first = _draw_all(config, scales, jnp.zeros((lam,), jnp.int32))
+    return ScenarioState(
+        now=jnp.float32(0.0),
+        next_t=jnp.where(base, first, jnp.inf).astype(jnp.float32),
+        n_draws=base.astype(jnp.int32),
+        dropped=jnp.zeros((lam,), bool),
+        window=jnp.zeros((), jnp.int32),
+    )
+
+
+def window_prologue(
+    config: ScenarioConfig, num_clients: int, state: ScenarioState, scales
+) -> Tuple[ScenarioState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-window fleet bookkeeping before any events fire.
+
+    1. elastic activation — clients entering the base set start a fresh
+       draw at the current wall time;
+    2. dropout/rejoin churn — per-client Bernoulli hazards from
+       window-indexed streams (skipped entirely when both rates are 0, so
+       churn-free scenarios consume no churn randomness);
+    3. effective-active mask — base ∧ ¬dropped, falling back to the base
+       set if churn ever darkens the whole fleet (documented guard: the
+       arrival process must always have someone to fire).
+
+    Returns ``(state', active_mask [λ] bool, n_dropouts, n_rejoins)``.
+    """
+    lam = int(num_clients)
+    now = state.now
+    base = _base_mask(config, lam, now)
+    next_t, n_draws = state.next_t, state.n_draws
+
+    # Elastic activation: parked clients are recognizable by next_t = +inf.
+    newly = base & jnp.isinf(next_t)
+    fresh = _draw_all(config, scales, n_draws)
+    next_t = jnp.where(newly, now + fresh, next_t)
+    n_draws = n_draws + newly.astype(jnp.int32)
+
+    dropped = state.dropped
+    zero = jnp.zeros((), jnp.int32)
+    n_drop, n_rejoin = zero, zero
+    if config.dropout_rate > 0 or config.rejoin_rate > 0:
+        cbase = _churn_base(config)
+
+        def coins(c):
+            key = jax.random.fold_in(
+                jax.random.fold_in(cbase, c), state.window)
+            return jax.random.uniform(key, (2,))
+
+        u = jax.vmap(coins)(jnp.arange(lam, dtype=jnp.int32))  # [λ, 2]
+        drops = base & ~dropped & (u[:, 0] < config.dropout_rate)
+        rejoins = dropped & (u[:, 1] < config.rejoin_rate)
+        # A rejoining client abandons its stale in-flight work and restarts
+        # from the current wall time on a fresh draw from its own stream.
+        restart = _draw_all(config, scales, n_draws)
+        next_t = jnp.where(rejoins, now + restart, next_t)
+        n_draws = n_draws + rejoins.astype(jnp.int32)
+        dropped = (dropped | drops) & ~rejoins
+        n_drop = jnp.sum(drops).astype(jnp.int32)
+        n_rejoin = jnp.sum(rejoins).astype(jnp.int32)
+
+    active = base & ~dropped
+    active = jnp.where(jnp.any(active), active, base)
+    new_state = state._replace(
+        next_t=next_t, n_draws=n_draws, dropped=dropped,
+        window=state.window + 1)
+    return new_state, active, n_drop, n_rejoin
+
+
+def async_window(
+    config: ScenarioConfig, num_clients: int, state: ScenarioState,
+    scales, active, num_events: int,
+) -> Tuple[ScenarioState, jnp.ndarray, jnp.ndarray]:
+    """Next ``num_events`` arrivals of the asynchronous discrete-event race.
+
+    Each step the active client with the earliest finish time fires; the
+    wall clock advances to that finish time and the client immediately
+    redraws its next service time from its private stream.  Returns
+    ``(state', clients [K] i32, finish_times [K] f32)`` with finish times
+    nondecreasing.
+    """
+    inf = jnp.float32(jnp.inf)
+    base = _svc_base(config)
+
+    def body(carry, _):
+        now, next_t, n_draws = carry
+        masked = jnp.where(active, next_t, inf)
+        c = jnp.argmin(masked).astype(jnp.int32)
+        # max() guards monotonicity if a reactivated client carried an old
+        # finish time from before it was parked.
+        t = jnp.maximum(masked[c], now)
+        key = jax.random.fold_in(jax.random.fold_in(base, c), n_draws[c])
+        dt = _service_time(config, key, scales[c])
+        next_t = next_t.at[c].set(t + dt)
+        n_draws = n_draws.at[c].add(1)
+        return (t, next_t, n_draws), (c, t)
+
+    (now, next_t, n_draws), (cs, t_fin) = jax.lax.scan(
+        body, (state.now, state.next_t, state.n_draws), None,
+        length=int(num_events))
+    new_state = state._replace(now=now, next_t=next_t, n_draws=n_draws)
+    return new_state, cs, t_fin
+
+
+def sync_round(
+    config: ScenarioConfig, num_clients: int, state: ScenarioState,
+    scales, k_used: int,
+) -> Tuple[ScenarioState, jnp.ndarray, jnp.ndarray]:
+    """One synchronous round of λ arrivals ordered fastest-first.
+
+    All λ clients start together at ``now`` and draw one service time; the
+    round (and the wall clock) ends at the ``k_used``-th order statistic
+    t₍ₖ₎ — the K-async partial-barrier time (Dutta et al. §3), with
+    ``k_used = λ`` recovering the full ssgd barrier.  Arrivals after the
+    k-th are the cancelled stragglers: they are still delivered as events
+    (and billed as traffic) but a partial-barrier rule discards them.
+
+    Returns ``(state', clients [λ] i32 fastest-first, finish_times [λ])``.
+    """
+    lam = int(num_clients)
+    k_used = int(k_used)
+    if not 1 <= k_used <= lam:
+        raise ValueError(f"k_used={k_used} outside [1, {lam}]")
+    dts = _draw_all(config, scales, state.n_draws)      # [λ]
+    order = jnp.argsort(dts).astype(jnp.int32)          # stable: ties by index
+    sorted_dt = dts[order]
+    t_fin = state.now + sorted_dt
+    new_state = state._replace(
+        now=state.now + sorted_dt[k_used - 1],
+        n_draws=state.n_draws + 1)
+    return new_state, order, t_fin
+
+
+def count_scenario(counters, *, now, active_count, dropouts, rejoins):
+    """Fold one window's scenario telemetry into an `engine.Counters`.
+
+    ``wall_clock`` is a max-fold of the absolute modeled clock (monotone by
+    construction); the scenario_* fields accumulate per-window churn counts
+    and the mean-active numerator.
+    """
+    return counters._replace(
+        wall_clock=jnp.maximum(counters.wall_clock,
+                               jnp.asarray(now, jnp.float32)),
+        scenario_dropouts=counters.scenario_dropouts
+        + jnp.asarray(dropouts, jnp.int32),
+        scenario_rejoins=counters.scenario_rejoins
+        + jnp.asarray(rejoins, jnp.int32),
+        scenario_active_sum=counters.scenario_active_sum
+        + jnp.asarray(active_count, jnp.float32),
+        scenario_windows=counters.scenario_windows + 1,
+    )
+
+
+def advance_wall(counters, dt, *, active_count):
+    """Advance the round trainer's relative wall clock by ``dt`` (one round
+    = one window; no churn in the round trainer's fixed-C fleet)."""
+    return counters._replace(
+        wall_clock=counters.wall_clock + jnp.asarray(dt, jnp.float32),
+        scenario_active_sum=counters.scenario_active_sum
+        + jnp.asarray(active_count, jnp.float32),
+        scenario_windows=counters.scenario_windows + 1,
+    )
+
+
+def round_service_times(
+    config: ScenarioConfig, num_clients: int, round_idx
+) -> jnp.ndarray:
+    """Per-round service draws [C] for the round trainer's scenario-lite
+    wall clock, keyed by ``(seed, client, round_idx)`` so client streams
+    stay independent (no `ScenarioState` carry needed)."""
+    lam = int(num_clients)
+    scales = client_scales(config, lam)
+    idx = jnp.broadcast_to(jnp.asarray(round_idx, jnp.int32), (lam,))
+    return _draw_all(config, scales, idx)
+
+
+Scenario = Optional[ScenarioConfig]  # config-field alias used by SimConfig

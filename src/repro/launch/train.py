@@ -22,6 +22,7 @@ from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import TrainerConfig
 from repro.core import rules as server_rules
+from repro.core import scenarios
 from repro.core.round_trainer import build_round_step, init_round_state
 from repro.data.tokens import TokenDataConfig, make_batch as make_token_batch
 from repro.launch.mesh import make_host_mesh
@@ -71,6 +72,14 @@ def main():
     ap.add_argument("--admission-policy", default="block",
                     choices=["block", "reject", "drop_oldest"],
                     help="what happens to a push arriving at a full queue")
+    ap.add_argument("--scenario", default="off",
+                    choices=["off"] + sorted(scenarios.SCENARIO_PRESETS),
+                    help="modeled arrival process (core/scenarios.py): "
+                         "rounds get wall-clock durations from per-client "
+                         "service draws; pushes apply fastest-first")
+    ap.add_argument("--kasync-k", type=int, default=0,
+                    help="partial-barrier K for --rule kasync "
+                         "(0 = clients // 2 when the rule is kasync)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -78,12 +87,22 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    scn = (None if args.scenario == "off"
+           else scenarios.preset(args.scenario))
+    if scn is not None and args.clients <= 0:
+        ap.error("--scenario needs the round trainer (--clients C > 0)")
+    kasync_k = args.kasync_k
+    if args.rule == "kasync" and kasync_k == 0:
+        # a full-barrier default would make kasync ≡ ssgd; half the fleet
+        # is the interesting operating point out of the box
+        kasync_k = max(1, args.clients // 2)
     tc = TrainerConfig(
         num_round_clients=max(args.clients, 1), rule=args.rule, lr=args.lr,
         c_push=args.c_push, c_fetch=args.c_fetch, variant=args.variant,
         per_tensor_push=args.per_tensor, per_tensor_fetch=args.per_tensor,
         queue_capacity=args.queue_capacity, drain_policy=args.drain_policy,
         drain_k=args.drain_k, admission_policy=args.admission_policy,
+        scenario=scn, kasync_k=kasync_k,
         seed=args.seed,
     )
     mesh = make_host_mesh(data=len(jax.devices()))
@@ -117,10 +136,12 @@ def main():
             state, m = step_fn(state, batch, jax.random.fold_in(
                 jax.random.PRNGKey(args.seed), step))
             if step % args.log_every == 0 or step == args.steps - 1:
+                wall = (f" wall={float(m['wall']):.2f}"
+                        if "wall" in m else "")
                 print(f"  step {step:5d} loss={float(m['loss']):.4f} "
                       f"tau={float(m['mean_tau']):.2f} "
                       f"push={int(m['pushes'])}/{C} fetch={int(m['fetches'])}/{C} "
-                      f"T={int(m['timestamp'])}")
+                      f"T={int(m['timestamp'])}{wall}")
             if args.ckpt_every and args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
                 save_checkpoint(args.ckpt_dir, step + 1, state)
         dt = time.time() - t0
@@ -144,6 +165,16 @@ def main():
                   f"peak {int(cnt.queue_depth_peak)}, "
                   f"mean latency "
                   f"{float(cnt.queue_latency_sum) / max(int(cnt.queue_drained), 1):.2f} T-ticks")
+        if scn is not None:
+            rounds = max(int(cnt.scenario_windows), 1)
+            k_used = (tc.kasync_k or C) if server_rules.get_rule(
+                args.rule).synchronous else C
+            print(f"[train] scenario '{args.scenario}': "
+                  f"wall={float(cnt.wall_clock):.2f} "
+                  f"({float(cnt.wall_clock) / rounds:.3f}/round, "
+                  f"barrier {k_used}/{C}), "
+                  f"mean active {float(cnt.scenario_active_sum) / rounds:.1f}"
+                  f"/{C} over {rounds} rounds")
     else:
         scfg = server_config(tc)
         state = server_rules.init(scfg, params)

@@ -1,3 +1,15 @@
+"""FRED: the pure-JAX discrete-event simulator of the paper's protocol.
+
+- `SimConfig` / `SimState` — one fleet configuration and its carry
+- `run_simulation` — host loop: spans of jit-compiled event windows +
+  periodic host-side eval (the error-vs-events / error-vs-wall curves)
+- `build_step_fn` / `init_sim` — the per-window scan step for callers
+  that drive the scan themselves (benchmarks, throughput measurement)
+- `shard_fleet` — shard_map the [λ] client axis across a device mesh
+
+See `repro.sim.fred`'s module docstring for the protocol semantics and
+docs/SCENARIOS.md for the modeled arrival-time processes.
+"""
 from repro.sim.fred import (
     SimConfig,
     SimState,

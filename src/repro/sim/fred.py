@@ -82,6 +82,7 @@ import jax.numpy as jnp
 from repro.core import engine
 from repro.core import queue as qlib
 from repro.core import rules as server_rules
+from repro.core import scenarios as scen
 from repro.core.bandwidth import BandwidthConfig, masked_bytes, tree_bytes
 from repro.core.engine import (
     Counters,
@@ -96,6 +97,16 @@ from repro.core.rules import ServerConfig, ServerState
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
+    """One FRED fleet: λ clients, a server rule, and the event schedule.
+
+    Groups four orthogonal axes of the simulation — the update protocol
+    (`server`, `bandwidth`), the event engine (`events_per_step`,
+    `apply_mode`, `fused_mode`), the server's ingress queue
+    (`queue_capacity` + policies), and the modeled arrival-time process
+    (`scenario`).  `__post_init__` rejects combinations with no coherent
+    semantics rather than letting them run and mislead.
+    """
+
     num_clients: int = 4
     batch_size: int = 32
     server: ServerConfig = ServerConfig()
@@ -117,6 +128,12 @@ class SimConfig:
                                   # of the 'adaptive' batch)
     drain_adaptive_gain: float = 0.5    # 'adaptive': drain ceil(gain·depth)
     admission_policy: str = "block"     # 'block' | 'reject' | 'drop_oldest'
+    # --- modeled arrival-time process (core/scenarios.py) ---
+    # None = the classic fixed K-per-window arrival model with a unit event
+    # clock; a ScenarioConfig replaces the dispatcher with a discrete-event
+    # service-time race (stragglers / hotspots / churn / elastic resize) and
+    # gives every run a modeled wall-clock axis (docs/SCENARIOS.md).
+    scenario: Optional[scen.ScenarioConfig] = None
 
     def cotangent_eligible(self) -> bool:
         """True iff the cotangent fused path can serve this configuration.
@@ -152,8 +169,11 @@ class SimConfig:
                 f"(see SimConfig.cotangent_eligible)")
         rule = server_rules.get_rule(self.server.rule)
         if rule.synchronous:
-            # A synchronous barrier only makes sense with a fair schedule.
-            assert self.dispatcher == "roundrobin", \
+            # A synchronous barrier only makes sense with a fair schedule —
+            # either round-robin dispatch, or a scenario (whose sync_round
+            # delivers every client exactly once per round, fastest-first).
+            assert self.scenario is not None \
+                or self.dispatcher == "roundrobin", \
                 f"{self.server.rule} requires roundrobin"
             # Per-leaf push masks would desync the barrier's pending-sum /
             # count invariant (leaves revert independently while the scalar
@@ -220,9 +240,37 @@ class SimConfig:
                         f"{self.events_per_step}): a full arrival window "
                         f"must always fit the drained-empty ring — raise "
                         f"queue_capacity or use 'reject'/'drop_oldest'")
+        # --- scenario validation (core/scenarios.py; docs/SCENARIOS.md) ---
+        if self.scenario is not None:
+            if self.dispatcher == "heterogeneous":
+                raise ValueError(
+                    "a scenario's service-time model replaces the "
+                    "heterogeneous dispatcher's speed schedule: configure "
+                    "hotspot/straggler client scales in ScenarioConfig "
+                    "instead (dispatcher='uniform' or 'roundrobin' are "
+                    "accepted and ignored for arrival ordering)")
+            # raises early on inconsistent straggler/hotspot fractions
+            scen.client_scales(self.scenario, self.num_clients)
+            if rule.synchronous:
+                if self.events_per_step != self.num_clients:
+                    raise ValueError(
+                        f"a synchronous rule under a scenario advances one "
+                        f"round of λ arrivals per scan step: set "
+                        f"events_per_step = num_clients (got "
+                        f"{self.events_per_step} != {self.num_clients})")
+                if self.scenario.has_churn():
+                    raise ValueError(
+                        f"synchronous rule {self.server.rule!r} cannot run "
+                        f"under dropout/rejoin/elastic churn: a barrier "
+                        f"over a changing fleet deadlocks — that failure "
+                        f"mode is exactly why kasync exists; use an async "
+                        f"rule, or a churn-free scenario "
+                        f"(stragglers/hotspot)")
 
 
 class SimState(NamedTuple):
+    """Scan carry: server + λ stale client copies + protocol bookkeeping."""
+
     server: ServerState
     client_params: Any            # pytree, leaves [λ, ...]
     client_ts: jnp.ndarray        # [λ] int32 — timestamp of each client's copy
@@ -236,6 +284,9 @@ class SimState(NamedTuple):
     # bounded server ingress queue (queue_capacity > 0; core/queue.py) —
     # server-side state, replicated like the server itself.
     queue: Optional[qlib.QueueState] = None
+    # modeled arrival-process state (SimConfig.scenario; core/scenarios.py)
+    # — tiny [λ] arrays, replicated like the server under shard_fleet.
+    scenario: Optional[scen.ScenarioState] = None
 
 
 def _queue_uses_cotangent(config: SimConfig) -> bool:
@@ -264,6 +315,9 @@ def _queue_payload_example(config: SimConfig, params):
 
 
 def init_sim(config: SimConfig, params) -> SimState:
+    """Fresh `SimState`: server at T = 0, λ identical client copies, and
+    whatever optional carry the config asks for (gradient cache, per-tensor
+    timestamps, ingress queue, scenario arrival state)."""
     lam = config.num_clients
     server = server_rules.init(config.server, params)
     use_cache = config.bandwidth.c_push > 0 and config.bandwidth.drop_policy == "cache"
@@ -282,8 +336,11 @@ def init_sim(config: SimConfig, params) -> SimState:
             config.queue_capacity, _queue_payload_example(config, params),
             n_leaves=(len(jax.tree.leaves(params))
                       if config.bandwidth.per_tensor_fetch else 0),
-            mask_like=(params if config.bandwidth.per_tensor_push else None))
+            mask_like=(params if config.bandwidth.per_tensor_push else None),
+            track_wall=config.scenario is not None)
             if config.queue_capacity else None),
+        scenario=(scen.init_scenario(config.scenario, lam)
+                  if config.scenario is not None else None),
     )
 
 
@@ -353,6 +410,8 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
         engine.resolve_event_batched_loss(loss_fn, batched_loss_fn)
         if use_cotangent else None)
     vgrad = jax.vmap(grad_fn)
+    scn = config.scenario
+    scn_scales = scen.client_scales(scn, lam) if scn is not None else None
 
     def step(state: SimState, keys):
         ks = jax.vmap(lambda k: jax.random.split(k, 4))(keys)    # [K, 4, ...]
@@ -360,8 +419,16 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
         k_push, k_fetch = ks[:, 2], ks[:, 3]
         model_bytes = tree_bytes(state.server.params)
 
-        # --- dispatch K arrival events ---
-        if config.dispatcher == "roundrobin":
+        # --- dispatch K arrival events (a scenario replaces the dispatcher:
+        # arrival order and finish times come from the modeled service race,
+        # so the ingress queue sees realistic hotspot/straggler load) ---
+        scn_state, t_fin = state.scenario, None
+        if scn is not None:
+            scn_state, active, n_drop, n_rejoin = scen.window_prologue(
+                scn, lam, state.scenario, scn_scales)
+            scn_state, cs, t_fin = scen.async_window(
+                scn, lam, scn_state, scn_scales, active, K)
+        elif config.dispatcher == "roundrobin":
             cs = (state.rr_pos + jnp.arange(K)) % lam
         elif config.dispatcher == "uniform":
             cs = jax.vmap(lambda k: jax.random.randint(k, (), 0, lam))(k_disp)
@@ -417,7 +484,8 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
             payload=payload, ts=state.client_ts[cs], client=cs,
             valid=push_event,
             leaf_ts=(dedup_key if bw.per_tensor_fetch else None),
-            leaf_mask=(push if bw.per_tensor_push else None))
+            leaf_mask=(push if bw.per_tensor_push else None),
+            wall=t_fin)
         queue, admitted, n_rejected, n_dropped = qlib.enqueue(
             state.queue, arrivals, config.admission_policy,
             state.server.timestamp)
@@ -439,6 +507,10 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
         latency_sum = jnp.sum(jnp.where(
             batch.valid,
             (state.server.timestamp - batch.enq_T).astype(jnp.float32), 0.0))
+        latency_wall_sum = (
+            jnp.sum(jnp.where(batch.valid,
+                              scn_state.now - batch.enq_wall, 0.0))
+            if scn is not None else None)
 
         if bw.per_tensor_fetch:
             treedef = jax.tree.structure(state.server.params)
@@ -513,7 +585,12 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
             enqueued=jnp.sum(admitted.astype(jnp.int32)),
             rejected=n_rejected, dropped=n_dropped, drained=k_eff,
             depth_post=queue.size, depth_peak=depth_peak,
-            latency_sum=latency_sum)
+            latency_sum=latency_sum, latency_wall_sum=latency_wall_sum)
+        if scn is not None:
+            counters = scen.count_scenario(
+                counters, now=scn_state.now,
+                active_count=jnp.sum(active.astype(jnp.float32)),
+                dropouts=n_drop, rejoins=n_rejoin)
 
         new_state = SimState(
             server=new_server,
@@ -524,6 +601,7 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
             counters=counters,
             client_leaf_ts=client_leaf_ts,
             queue=queue,
+            scenario=scn_state,
         )
         validf = batch.valid.astype(jnp.float32)
         nz = jnp.maximum(k_eff, 1).astype(jnp.float32)
@@ -540,6 +618,8 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
             "rejected": n_rejected,
             "dropped": n_dropped,
         }
+        if t_fin is not None:
+            metrics["wall"] = t_fin                    # per-arrival wall time
         return new_state, metrics
 
     return step
@@ -574,6 +654,14 @@ def build_step_fn(
     lam = config.num_clients
     K = events if events is not None else config.events_per_step
     het_logits = _het_logits(config)
+    rule = server_rules.get_rule(scfg.rule)
+    scn = config.scenario
+    scn_scales = scen.client_scales(scn, lam) if scn is not None else None
+    if scn is not None and rule.synchronous and K != lam:
+        raise ValueError(
+            f"synchronous scenario rounds advance exactly λ={lam} events "
+            f"per step, got a {K}-event window: num_steps and eval_every "
+            f"must be multiples of num_clients")
 
     if config.queue_capacity:
         if mesh is not None:
@@ -586,10 +674,21 @@ def build_step_fn(
             config, loss_fn, data_x, data_y, K,
             batched_loss_fn=batched_loss_fn)
 
-    def event_body(state: SimState, key):
-        """One client event — the paper's protocol, verbatim."""
+    def event_body(state: SimState, inp):
+        """One client event — the paper's protocol, verbatim.
+
+        `inp` is the event's PRNG key; under a scenario it is ``(key, c)``
+        with the firing client precomputed by the arrival process (the
+        dispatch key is split but unused, so the per-event batch/gate
+        streams are position-independent either way).
+        """
+        if scn is None:
+            key = inp
+        else:
+            key, c = inp
         k_disp, k_batch, k_push, k_fetch = jax.random.split(key, 4)
-        c = _dispatch(config, state.rr_pos, k_disp, het_logits)
+        if scn is None:
+            c = _dispatch(config, state.rr_pos, k_disp, het_logits)
         model_bytes = tree_bytes(state.server.params)
 
         # --- client computes a stochastic gradient on its (stale) params ---
@@ -690,6 +789,8 @@ def build_step_fn(
             rr_pos=state.rr_pos + 1,
             counters=counters,
             client_leaf_ts=client_leaf_ts,
+            queue=state.queue,
+            scenario=state.scenario,
         )
         metrics = {
             "loss": loss,
@@ -701,8 +802,33 @@ def build_step_fn(
         return new_state, metrics
 
     if config.apply_mode == "serial":
+        if scn is None:
+            def step(state: SimState, keys):
+                return jax.lax.scan(event_body, state, keys)
+            return step
+
+        sync_k = rule.barrier_k(scfg) if rule.synchronous else None
+
         def step(state: SimState, keys):
-            return jax.lax.scan(event_body, state, keys)
+            # window prologue: elastic activation + churn, then the modeled
+            # arrival order — a sorted λ-round for barrier rules, a K-event
+            # discrete-event race otherwise (core/scenarios.py).
+            scn_state, active, n_drop, n_rejoin = scen.window_prologue(
+                scn, lam, state.scenario, scn_scales)
+            if rule.synchronous:
+                scn_state, cs, t_fin = scen.sync_round(
+                    scn, lam, scn_state, scn_scales, sync_k)
+            else:
+                scn_state, cs, t_fin = scen.async_window(
+                    scn, lam, scn_state, scn_scales, active, K)
+            counters = scen.count_scenario(
+                state.counters, now=scn_state.now,
+                active_count=jnp.sum(active.astype(jnp.float32)),
+                dropouts=n_drop, rejoins=n_rejoin)
+            state = state._replace(scenario=scn_state, counters=counters)
+            state, metrics = jax.lax.scan(event_body, state, (keys, cs))
+            metrics["wall"] = t_fin
+            return state, metrics
         return step
 
     # ----- fused: all K events advance in one batched protocol round -----
@@ -734,8 +860,16 @@ def build_step_fn(
         k_push, k_fetch = ks[:, 2], ks[:, 3]
         model_bytes = tree_bytes(state.server.params)
 
-        # --- dispatch K events (λ-vectorized) ---
-        if config.dispatcher == "roundrobin":
+        # --- dispatch K events (λ-vectorized; a scenario replaces the
+        # dispatcher with the modeled service race — the scenario state is
+        # replicated, so the shard_map'd gradient batch is untouched) ---
+        scn_state, t_fin = state.scenario, None
+        if scn is not None:
+            scn_state, active, n_drop, n_rejoin = scen.window_prologue(
+                scn, lam, state.scenario, scn_scales)
+            scn_state, cs, t_fin = scen.async_window(
+                scn, lam, scn_state, scn_scales, active, K)
+        elif config.dispatcher == "roundrobin":
             cs = (state.rr_pos + jnp.arange(K)) % lam
         elif config.dispatcher == "uniform":
             cs = jax.vmap(lambda k: jax.random.randint(k, (), 0, lam))(k_disp)
@@ -857,6 +991,11 @@ def build_step_fn(
             state.counters, push_event, fetch,
             push_bytes_sent=push_sent, push_bytes_total=push_total,
             fetch_bytes_sent=fetch_sent, fetch_bytes_total=K * model_bytes)
+        if scn is not None:
+            counters = scen.count_scenario(
+                counters, now=scn_state.now,
+                active_count=jnp.sum(active.astype(jnp.float32)),
+                dropouts=n_drop, rejoins=n_rejoin)
 
         new_state = SimState(
             server=new_server,
@@ -866,6 +1005,8 @@ def build_step_fn(
             rr_pos=state.rr_pos + K,
             counters=counters,
             client_leaf_ts=client_leaf_ts,
+            queue=state.queue,
+            scenario=scn_state,
         )
         metrics = {
             "loss": losses,
@@ -874,6 +1015,8 @@ def build_step_fn(
             "pushed": push_event,
             "fetched": fetch,
         }
+        if t_fin is not None:
+            metrics["wall"] = t_fin
         return new_state, metrics
 
     return step
@@ -930,7 +1073,8 @@ def run_simulation(
         train_losses.append(metrics["loss"].reshape(-1))
         taus.append(metrics["tau"].reshape(-1))
 
-    curve_steps, curve_cost, train_losses, taus = [], [], [], []
+    curve_steps, curve_cost, curve_wall = [], [], []
+    train_losses, taus = [], []
     done = 0
     while done < num_steps:
         span = min(eval_every, num_steps - done)
@@ -948,6 +1092,11 @@ def run_simulation(
         if eval_jit is not None:
             curve_steps.append(done)
             curve_cost.append(float(eval_jit(state.server.params)))
+            # error-vs-wall-clock axis: the modeled wall time under a
+            # scenario, else the unit event clock (1 event = 1 tick)
+            curve_wall.append(
+                float(state.counters.wall_clock)
+                if config.scenario is not None else float(done))
 
     counters = jax.tree.map(float, state.counters._asdict())
     if not config.queue_capacity:
@@ -955,10 +1104,15 @@ def run_simulation(
         # the queue telemetry only appears when a queue is configured
         counters = {k: v for k, v in counters.items()
                     if not k.startswith("queue_")}
+    if config.scenario is None:
+        # same stability contract for the wall-clock/scenario telemetry
+        counters = {k: v for k, v in counters.items()
+                    if k != "wall_clock" and not k.startswith("scenario_")}
     out = {
         "state": state,
         "steps": curve_steps,
         "val_cost": curve_cost,
+        "wall_clock": curve_wall,
         "counters": counters,
         "final_timestamp": int(state.server.timestamp),
     }

@@ -214,3 +214,36 @@ def test_cotangent_fused_matches_materialized_under_collisions(
                     jax.tree.leaves(server_c.v)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scenario arrival processes (core/scenarios.py)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16), lam=st.integers(1, 16),
+       service=st.sampled_from(("fixed", "lognormal", "pareto")))
+def test_scenario_service_times_positive_finite(seed, lam, service):
+    """Every service-time model draws strictly positive finite times for
+    every client at every round index."""
+    from repro.core.scenarios import ScenarioConfig, round_service_times
+    cfg = ScenarioConfig(service=service, seed=seed)
+    for r in (0, 1, 7):
+        svc = np.asarray(round_service_times(cfg, lam, r))
+        assert np.all(svc > 0) and np.all(np.isfinite(svc))
+
+
+@given(seed=st.integers(0, 2**16), lam=st.integers(2, 12),
+       k=st.integers(1, 12))
+def test_scenario_sync_wall_is_kth_order_statistic(seed, lam, k):
+    """A partial barrier's round always costs exactly the k-th smallest
+    service draw — the identity the K-async wall accounting rests on."""
+    from repro.core import scenarios as scen
+    k = min(k, lam)
+    cfg = scen.ScenarioConfig(service="pareto", seed=seed)
+    state = scen.init_scenario(cfg, lam)
+    scales = scen.client_scales(cfg, lam)
+    t0 = float(state.now)
+    new, _, t_fin = scen.sync_round(cfg, lam, state, scales, k)
+    dts = np.sort(np.asarray(t_fin) - t0)
+    assert float(new.now) - t0 == pytest.approx(dts[k - 1])
+    assert float(new.now) >= t0

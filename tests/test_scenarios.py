@@ -1,0 +1,351 @@
+"""Scenario suite (core/scenarios.py) — arrival-process invariants, the
+K-async partial barrier, churn/elastic semantics, wall-clock accounting,
+and the output-schema stability contract when scenarios are off.
+
+The tentpole invariants:
+
+* **client isolation** — per-client service streams are keyed by
+  ``(seed, client, draw_index)``, so dropping (or slowing, or removing)
+  client i never perturbs any other client's event times, bitwise;
+* **kasync at K=λ is ssgd** — the partial barrier is a strict
+  generalization of the full barrier, bitwise on the server trajectory;
+* **wall clock is monotone** — modeled time never runs backwards on any
+  path (async discrete-event, sync order-statistic, round trainer);
+* **scenarios off changes nothing** — no new output keys, and the golden
+  trajectories replay bitwise (tests/test_goldens.py enforces the latter).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainerConfig
+from repro.core import round_trainer as rt
+from repro.core import rules as server_rules
+from repro.core import scenarios as scen
+from repro.core.rules import ServerConfig
+from repro.core.scenarios import ScenarioConfig, preset
+from repro.sim.fred import SimConfig, run_simulation
+
+from conftest import tree_equal
+
+
+def _cfg(rule="asgd", scenario=preset("stragglers"), **kw):
+    lam = kw.pop("num_clients", 4)
+    sync = server_rules.get_rule(rule).synchronous
+    return SimConfig(
+        num_clients=lam, batch_size=8,
+        dispatcher=kw.pop("dispatcher", "uniform"), seed=kw.pop("seed", 3),
+        server=ServerConfig(rule=rule, lr=0.01,
+                            num_clients=lam if sync else 1,
+                            **kw.pop("server_kwargs", {})),
+        scenario=scenario,
+        events_per_step=kw.pop("events_per_step", lam if sync else 1),
+        **kw)
+
+
+def _run(cfg, setup, steps=48):
+    params, ds, loss = setup
+    return run_simulation(
+        cfg, loss, params, ds.x_train, ds.y_train, steps, eval_every=steps,
+        eval_fn=lambda p: loss(p, ds.x_valid, ds.y_valid))
+
+
+# ---------------------------------------------------------------------------
+# arrival-process primitives
+# ---------------------------------------------------------------------------
+
+def _collect_async(cfg, lam, num_events, active):
+    """Fire `num_events` through async_window → per-client finish lists."""
+    scales = scen.client_scales(cfg, lam)
+    state = scen.init_scenario(cfg, lam)
+    state, cs, t_fin = scen.async_window(
+        cfg, lam, state, scales, active, num_events)
+    per_client = {c: [] for c in range(lam)}
+    for c, t in zip(np.asarray(cs), np.asarray(t_fin)):
+        per_client[int(c)].append(float(t))
+    return state, per_client
+
+
+@pytest.mark.parametrize("service", scen._SERVICE_KINDS)
+def test_service_times_positive(service):
+    cfg = ScenarioConfig(service=service, seed=7)
+    svc = scen.round_service_times(cfg, 64, 0)
+    assert bool(jnp.all(svc > 0)) and bool(jnp.all(jnp.isfinite(svc)))
+
+
+def test_dropout_isolation_bitwise():
+    """Removing client 1 from the fleet leaves every other client's event
+    times bitwise unchanged — the per-client stream keying contract that
+    makes churn results attributable to churn, not RNG reshuffling."""
+    cfg = preset("stragglers")
+    lam = 4
+    all_on = jnp.ones((lam,), bool)
+    without_1 = all_on.at[1].set(False)
+    _, full = _collect_async(cfg, lam, 16, all_on)
+    _, dropped = _collect_async(cfg, lam, 16, without_1)
+    assert not dropped[1], "a dropped client must never fire"
+    for c in (0, 2, 3):
+        n = min(len(full[c]), len(dropped[c]))
+        assert n > 0
+        assert full[c][:n] == dropped[c][:n]
+
+
+def test_async_event_times_monotone():
+    cfg = preset("stragglers")
+    lam = 8
+    state = scen.init_scenario(cfg, lam)
+    scales = scen.client_scales(cfg, lam)
+    state, _, t_fin = scen.async_window(
+        cfg, lam, state, scales, jnp.ones((lam,), bool), 64)
+    t = np.asarray(t_fin)
+    assert np.all(np.diff(t) >= 0), "event clock ran backwards"
+    assert float(state.now) == t[-1]
+
+
+def test_sync_round_wall_is_kth_order_statistic():
+    cfg = ScenarioConfig(service="lognormal", seed=5)
+    lam, k = 8, 3
+    state = scen.init_scenario(cfg, lam)
+    t0 = float(state.now)
+    scales = scen.client_scales(cfg, lam)
+    new, order, t_fin = scen.sync_round(cfg, lam, state, scales, k)
+    dts = np.sort(np.asarray(t_fin) - t0)
+    assert float(new.now) - t0 == pytest.approx(dts[k - 1])
+    # order is fastest-first over all λ clients
+    assert sorted(np.asarray(order).tolist()) == list(range(lam))
+    assert np.all(np.diff(np.asarray(t_fin)[np.asarray(order)] if False
+                          else np.sort(np.asarray(t_fin))) >= 0)
+
+
+def test_straggler_scales():
+    cfg = preset("stragglers")   # 1/8 of the fleet 16x slow
+    scales = np.asarray(scen.client_scales(cfg, 16))
+    assert np.sum(scales == 16.0) == 2 and np.sum(scales == 1.0) == 14
+
+
+def test_hotspot_scales():
+    cfg = preset("hotspot")      # 1/16 of the fleet 8x fast
+    scales = np.asarray(scen.client_scales(cfg, 16))
+    assert np.sum(scales == 1.0 / 8.0) == 1
+
+
+def test_elastic_resize_activates_parked_clients():
+    cfg = preset("elastic")      # half the fleet parked until resize_at
+    lam = 8
+    state = scen.init_scenario(cfg, lam)
+    scales = scen.client_scales(cfg, lam)
+    state, active, _, _ = scen.window_prologue(cfg, lam, state, scales)
+    assert int(jnp.sum(active)) == lam // 2
+    # advance the clock past the resize point, then re-run the prologue
+    state = state._replace(now=jnp.float32(cfg.resize_at + 1.0))
+    state, active, _, _ = scen.window_prologue(cfg, lam, state, scales)
+    assert int(jnp.sum(active)) == lam
+
+
+def test_dropout_rejoin_counts_are_consistent():
+    cfg = dataclasses.replace(preset("dropout"), dropout_rate=0.5,
+                              rejoin_rate=0.5, seed=11)
+    lam = 32
+    state = scen.init_scenario(cfg, lam)
+    scales = scen.client_scales(cfg, lam)
+    prev_active = lam
+    for _ in range(8):
+        state, active, n_drop, n_rejoin = scen.window_prologue(
+            cfg, lam, state, scales)
+        n_active = int(jnp.sum(active))
+        assert n_active >= 1, "fleet must never go fully dark"
+        assert n_active == prev_active - int(n_drop) + int(n_rejoin)
+        prev_active = n_active
+
+
+# ---------------------------------------------------------------------------
+# K-async rule
+# ---------------------------------------------------------------------------
+
+def test_kasync_at_k_lambda_is_ssgd_bitwise(mlp_setup):
+    """K=λ waits for everyone — the partial barrier degenerates to the
+    full barrier, bitwise (no scenario: identical event schedules)."""
+    lam = 4
+    outs = {}
+    for rule, kw in (("ssgd", {}), ("kasync", {"kasync_k": lam}),
+                     ("kasync", {})):        # kasync_k=0 defaults to λ
+        cfg = _cfg(rule, scenario=None, dispatcher="roundrobin",
+                   num_clients=lam, server_kwargs=kw, events_per_step=1)
+        outs[(rule, kw.get("kasync_k", 0))] = _run(cfg, mlp_setup)
+    ref = outs[("ssgd", 0)]
+    for key in (("kasync", lam), ("kasync", 0)):
+        assert tree_equal(ref["state"].server.params,
+                          outs[key]["state"].server.params)
+        assert ref["final_timestamp"] == outs[key]["final_timestamp"]
+
+
+def test_kasync_partial_barrier_applies_once_per_window(mlp_setup):
+    """K=2, λ=4: each λ-event window commits exactly one aggregate of the
+    two fastest arrivals; T counts windows, not events."""
+    lam, k, windows = 4, 2, 6
+    cfg = _cfg("kasync", num_clients=lam, server_kwargs={"kasync_k": k})
+    out = _run(cfg, mlp_setup, steps=lam * windows)
+    assert out["final_timestamp"] == windows
+    assert out["counters"]["wall_clock"] > 0
+
+
+def test_kasync_faster_wall_than_ssgd_under_stragglers(mlp_setup):
+    """The Dutta et al. claim at protocol level: to reach the same server
+    timestamp, the K-barrier's modeled wall is far below the λ-barrier's
+    (it waits for t_(K), not the straggler-dominated t_(λ))."""
+    lam, windows = 8, 4
+    walls = {}
+    for rule, kw in (("kasync", {"kasync_k": 2}), ("ssgd", {})):
+        cfg = _cfg(rule, num_clients=lam, server_kwargs=kw)
+        out = _run(cfg, mlp_setup, steps=lam * windows)
+        assert out["final_timestamp"] == windows
+        walls[rule] = out["counters"]["wall_clock"]
+    assert walls["kasync"] < walls["ssgd"] / 2
+
+
+def test_kasync_k_validation():
+    with pytest.raises(ValueError):
+        ServerConfig(rule="kasync", num_clients=4, kasync_k=5)
+    with pytest.raises(ValueError):
+        ServerConfig(rule="kasync", num_clients=4, kasync_k=-1)
+
+
+# ---------------------------------------------------------------------------
+# FRED integration: wall clock, output schema, config validation
+# ---------------------------------------------------------------------------
+
+def test_wall_clock_monotone_and_present(mlp_setup):
+    params, ds, loss = mlp_setup
+    cfg = _cfg("asgd", num_clients=4)
+    out = run_simulation(cfg, loss, params, ds.x_train, ds.y_train, 48,
+                         eval_every=12,
+                         eval_fn=lambda p: loss(p, ds.x_valid, ds.y_valid))
+    walls = out["wall_clock"]
+    assert len(walls) == len(out["val_cost"])
+    assert all(b >= a for a, b in zip(walls, walls[1:]))
+    assert out["counters"]["wall_clock"] == pytest.approx(walls[-1])
+    assert out["counters"]["scenario_windows"] > 0
+
+
+def test_scenario_off_output_schema_unchanged(mlp_setup):
+    """No scenario → no wall/scenario counters, and the wall curve falls
+    back to the unit event clock (goldens stay bitwise-stable)."""
+    out = _run(_cfg("asgd", scenario=None), mlp_setup)
+    assert "wall_clock" not in out["counters"]
+    assert not any(k.startswith("scenario_") for k in out["counters"])
+    assert out["wall_clock"] == [48.0]
+
+
+def test_scenario_run_converges(mlp_setup):
+    """End-to-end: stragglers + churn-free async training still learns."""
+    params, ds, loss = mlp_setup
+    cfg = _cfg("asgd", num_clients=4)
+    out = run_simulation(cfg, loss, params, ds.x_train, ds.y_train, 96,
+                         eval_every=48,
+                         eval_fn=lambda p: loss(p, ds.x_valid, ds.y_valid))
+    assert out["val_cost"][-1] < float(loss(params, ds.x_valid, ds.y_valid))
+
+
+def test_dropout_scenario_runs_async(mlp_setup):
+    out = _run(_cfg("asgd", scenario=preset("dropout"), seed=9), mlp_setup)
+    assert out["counters"]["wall_clock"] > 0
+
+
+def test_queued_scenario_tracks_wall_latency(mlp_setup):
+    cfg = _cfg("asgd", num_clients=4, events_per_step=4,
+               queue_capacity=8, drain_policy="drain_k", drain_k=2,
+               admission_policy="reject")
+    out = _run(cfg, mlp_setup)
+    assert out["counters"]["queue_latency_wall_sum"] >= 0
+    assert out["counters"]["queue_drained"] > 0
+
+
+def test_scenario_config_validation():
+    with pytest.raises(ValueError):
+        # sync barrier over a churning fleet deadlocks
+        _cfg("ssgd", scenario=preset("dropout"))
+    with pytest.raises(ValueError):
+        # sync rules advance one barrier per window
+        _cfg("ssgd", events_per_step=2)
+    with pytest.raises(ValueError):
+        # a scenario's service model replaces heterogeneous dispatch
+        _cfg("asgd", dispatcher="heterogeneous")
+    with pytest.raises(ValueError):
+        ScenarioConfig(service="weibull")
+    with pytest.raises(ValueError):
+        ScenarioConfig(dropout_rate=1.5)
+    with pytest.raises(KeyError):
+        preset("nonexistent")
+
+
+# ---------------------------------------------------------------------------
+# round trainer (scenario-lite)
+# ---------------------------------------------------------------------------
+
+def _round_setup(mlp_setup, tc):
+    params, ds, loss = mlp_setup
+    C = tc.num_round_clients
+    per = 64
+
+    def grad_fn(p, batch):
+        x, y = batch
+        return jax.value_and_grad(loss)(p, x, y)
+
+    xb = ds.x_train[: C * per].reshape(C, per, -1)
+    yb = ds.y_train[: C * per].reshape(C, per)
+    state = rt.init_round_state(tc, params)
+    step = jax.jit(rt.build_round_step(tc, grad_fn))
+    key = jax.random.PRNGKey(2)
+    m = None
+    for r in range(4):
+        key, k = jax.random.split(key)
+        state, m = step(state, (xb, yb), k)
+    return state, m
+
+
+def test_round_trainer_wall_matches_order_statistic(mlp_setup):
+    C, K = 8, 2
+    tc = TrainerConfig(num_round_clients=C, rule="kasync", kasync_k=K,
+                       scenario=preset("stragglers"))
+    state, m = _round_setup(mlp_setup, tc)
+    expect = sum(
+        float(jnp.sort(scen.round_service_times(tc.scenario, C, r))[K - 1])
+        for r in range(4))
+    assert float(state.counters.wall_clock) == pytest.approx(expect)
+    assert float(m["wall"]) == pytest.approx(expect)
+
+
+def test_round_trainer_async_rule_pays_full_round(mlp_setup):
+    C = 4
+    tc = TrainerConfig(num_round_clients=C, rule="fasgd",
+                       scenario=preset("stragglers"))
+    state, _ = _round_setup(mlp_setup, tc)
+    expect = sum(
+        float(jnp.max(scen.round_service_times(tc.scenario, C, r)))
+        for r in range(4))
+    assert float(state.counters.wall_clock) == pytest.approx(expect)
+
+
+def test_round_trainer_kasync_k_c_is_ssgd_bitwise(mlp_setup):
+    sA, _ = _round_setup(mlp_setup, TrainerConfig(
+        num_round_clients=4, rule="kasync", lr=0.05))
+    sB, _ = _round_setup(mlp_setup, TrainerConfig(
+        num_round_clients=4, rule="ssgd", lr=0.05))
+    assert tree_equal(sA.server.params, sB.server.params)
+
+
+def test_round_trainer_rejects_churn_scenarios(mlp_setup):
+    params, ds, loss = mlp_setup
+
+    def grad_fn(p, batch):
+        x, y = batch
+        return jax.value_and_grad(loss)(p, x, y)
+
+    for name in ("dropout", "elastic"):
+        with pytest.raises(ValueError, match="FRED-only"):
+            rt.build_round_step(
+                TrainerConfig(num_round_clients=4, scenario=preset(name)),
+                grad_fn)
