@@ -8,11 +8,15 @@ of TPU), so we report BOTH:
   · measured CPU wall time of the jnp reference vs XLA-fused version
     (interpret-mode Pallas timing is meaningless and excluded by default).
 
-Covers both kernels:
+Covers all three kernels:
   · ``fasgd_update`` — one gradient, eqs. 4–8 fused (`kernels/fasgd_update`);
   · ``batched_update`` — the fused-apply event batch, Σ_k m_k·c_k·
     scale(v,τ_k)·g_k over K gradients (`kernels/batched_update`), per-leaf
-    mask/τ SMEM vectors included.
+    mask/τ SMEM vectors included;
+  · ``one_kernel`` — the whole event loop (gate→stats→coeff→accumulate) in
+    one launch (`kernels/fused_event_apply`), benched against the prefold
+    split path it retires, with *measured* bytes/launch from XLA's compiled
+    cost analysis next to the analytic roofline, and a block_rows sweep.
 
 Writes ``benchmarks/results/kernels.json`` and ``BENCH_kernels.json`` at
 the repo root (schema-checked in CI).
@@ -26,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ref import fasgd_update_ref
+from repro.kernels.ref import fasgd_update_ref, fused_event_apply_ref
 from benchmarks.common import save_bench
 
 
@@ -65,6 +69,43 @@ def hbm_model_batched(n_params: int, num_events: int, dtype_bytes: int = 4):
         "fused_bytes": (K + 3) * n_params * dtype_bytes,
         "bound_speedup": round((5 * K + 3) / (K + 3), 2),
     }
+
+
+def hbm_model_one_kernel(n_params: int, num_events: int,
+                         dtype_bytes: int = 4):
+    """Bytes moved per drained window, one-kernel vs the split path.
+
+    Split path (XLA stats block + the prefolded scale/accumulate): the
+    mean-gradient stats step reads the K gradients once and round-trips
+    n/b/v (≈ K+11 passes), then the broadcast apply materializes the
+    [K, *s] weighted-scale product (≈ 5K+3 passes) — ≈ 6K+14 total.
+    One kernel: read θ,n,b,v + each gradient tile once, accumulate Δθ and
+    the eq. 4-6 state in VMEM, write θ,n,b,v = K+8 passes — every leaf
+    read once / written once per batch.
+    """
+    K = num_events
+    return {
+        "num_events": K,
+        "unfused_bytes": (6 * K + 14) * n_params * dtype_bytes,
+        "fused_bytes": (K + 8) * n_params * dtype_bytes,
+        "bound_speedup": round((6 * K + 14) / (K + 8), 2),
+    }
+
+
+def measured_bytes(f, *args):
+    """Compiler-reported bytes accessed per launch of jit(f)(*args).
+
+    XLA's compiled cost analysis turns the analytic HBM roofline into a
+    measured quantity (on CPU it is the same HLO the TPU path sees, minus
+    the Pallas call itself).  Returns -1.0 when the backend offers no cost
+    model.
+    """
+    try:
+        c = jax.jit(f).lower(*args).compile().cost_analysis()
+        ca = c[0] if isinstance(c, (list, tuple)) else c
+        return float(ca.get("bytes accessed", -1.0))
+    except Exception:
+        return -1.0
 
 
 def time_fn(f, *args, iters=20):
@@ -158,11 +199,93 @@ def run_batched(rows, num_events, iters, include_interpret):
     return out
 
 
+def prefold_split_ref(p, g, n, b, v, w, wm, taus, lr, eps=1e-8):
+    """The split path the one-kernel retires: XLA stats step + prefolded
+    broadcast scale/accumulate (materializes the [K, R, 128] product)."""
+    g32 = g.astype(jnp.float32)
+    gbar = jnp.einsum("k,k...->...", wm, g32)
+    n1 = 0.9 * n + 0.1 * gbar * gbar
+    b1 = 0.9 * b + 0.1 * gbar
+    std = jnp.sqrt(jnp.maximum(n1 - b1 * b1, 0.0) + eps)
+    v1 = 0.9 * v + 0.1 * std
+    scale = lr / (v1[None] * taus[:, None, None] + eps)
+    p1 = p - jnp.sum(w[:, None, None] * scale * g32, axis=0)
+    return p1, n1, b1, v1
+
+
+def run_one_kernel(rows, num_events, iters, include_interpret,
+                   sweep_block_rows=(8, 32, 128, 256)):
+    """The whole event loop in one launch vs the split path it retires.
+
+    Reports measured bytes/launch (XLA cost analysis) for both, so the
+    (6K+14)/(K+8) roofline is checked against the compiler, plus an
+    interpret-mode block_rows sweep (CPU-relative only — interpret wall
+    time is not TPU-predictive, but the sweep shape is).
+    """
+    from repro.kernels.fused_event_apply import fused_event_apply_2d
+    lanes = 128
+    n = rows * lanes
+    K = num_events
+    ks = jax.random.split(jax.random.PRNGKey(2), 8)
+    p = jax.random.normal(ks[0], (rows, lanes))
+    g = jax.random.normal(ks[1], (K, rows, lanes)) * 0.1
+    nb = jnp.abs(jax.random.normal(ks[2], (rows, lanes))) * 0.01
+    b = jax.random.normal(ks[3], (rows, lanes)) * 0.01
+    v = 1.0 + 0.1 * jax.random.normal(ks[4], (rows, lanes))
+    taus = 1.0 + jnp.abs(jax.random.normal(ks[5], (K,))) * 3.0
+    w = (jax.random.uniform(ks[6], (K,)) < 0.7).astype(jnp.float32)
+    wm = w / jnp.maximum(jnp.sum(w), 1.0)
+
+    split = jax.jit(lambda *a: prefold_split_ref(*a, 0.01))
+    onek = jax.jit(lambda *a: fused_event_apply_ref(*a, 0.01, 1.0))
+    args_ = (p, g, nb, b, v, w, wm, taus)
+    t_split = time_fn(split, *args_, iters=iters)
+    t_onek = time_fn(onek, *args_, iters=iters)
+
+    out = {
+        "n_params": n,
+        "num_events": K,
+        "split_jit_us": t_split * 1e6,
+        "one_kernel_us": t_onek * 1e6,
+        "measured_speedup": round(t_split / max(t_onek, 1e-12), 2),
+        "split_measured_bytes": measured_bytes(split, *args_),
+        "one_kernel_measured_bytes": measured_bytes(onek, *args_),
+        "hbm_model": hbm_model_one_kernel(n, K),
+    }
+    if include_interpret:
+        sweep = []
+        for br in sweep_block_rows:
+            if rows % br:
+                continue
+            k_jit = jax.jit(lambda *a, br=br: fused_event_apply_2d(
+                *a, 0.01, 1.0, block_rows=br, interpret=True)[0])
+            sweep.append({"block_rows": br,
+                          "interpret_us": time_fn(k_jit, *args_,
+                                                  iters=2) * 1e6})
+        out["block_rows_sweep"] = sweep
+
+    # correctness cross-check rides along with every bench run: the Pallas
+    # body (interpret), the streaming oracle, and the split path agree
+    po, no, bo, vo = fused_event_apply_2d(
+        p, g, nb, b, v, w, wm, taus, 0.01, 1.0,
+        block_rows=min(rows, 256), interpret=True)
+    pr, nr, br_, vr = fused_event_apply_ref(
+        p, g, nb, b, v, w, wm, taus, 0.01, 1.0)
+    ps, ns, bs, vs = split(*args_)
+    for a, r in ((po, pr), (vo, vr), (pr, ps), (vr, vs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=1e-5, atol=1e-6)
+    out["allclose_vs_ref"] = True
+    return out
+
+
 def run(rows=1 << 14, num_events=16, iters=20, include_interpret=False):
     out = {
         "fasgd_update": run_fasgd(rows, iters, include_interpret),
         "batched_update": run_batched(rows, num_events, iters,
                                       include_interpret),
+        "one_kernel": run_one_kernel(rows, num_events, iters,
+                                     include_interpret),
     }
     save_bench("BENCH_kernels.json", out)
     return out
@@ -172,12 +295,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=1 << 14)
     ap.add_argument("--events", type=int, default=16,
-                    help="event-batch size K for the batched kernel")
+                    help="event-batch size K for the batched kernels")
     ap.add_argument("--interpret", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small shapes, few iters")
     args = ap.parse_args()
+    if args.quick:
+        args.rows, args.events = min(args.rows, 1 << 10), min(args.events, 8)
     out = run(args.rows, num_events=args.events,
+              iters=3 if args.quick else 20,
               include_interpret=args.interpret)
     f, bk = out["fasgd_update"], out["batched_update"]
+    ok = out["one_kernel"]
     print(f"  fasgd_update:   n={f['n_params']:,} "
           f"ref_jit={f['ref_jit_us']:.0f}us "
           f"hbm-bound speedup={f['hbm_model']['bound_speedup']:.2f}x "
@@ -186,6 +315,14 @@ def main():
           f"ref_jit={bk['ref_jit_us']:.0f}us "
           f"hbm-bound speedup={bk['hbm_model']['bound_speedup']:.2f}x "
           f"allclose={bk['allclose_vs_ref']}")
+    print(f"  one_kernel:     n={ok['n_params']:,} K={ok['num_events']} "
+          f"split={ok['split_jit_us']:.0f}us "
+          f"one-kernel={ok['one_kernel_us']:.0f}us "
+          f"({ok['measured_speedup']:.2f}x measured, "
+          f"{ok['hbm_model']['bound_speedup']:.2f}x hbm bound; "
+          f"bytes {ok['split_measured_bytes']:.3g} -> "
+          f"{ok['one_kernel_measured_bytes']:.3g}) "
+          f"allclose={ok['allclose_vs_ref']}")
 
 
 if __name__ == "__main__":

@@ -23,11 +23,18 @@ Three arms per (rule, λ) cell:
   materialized — the weight-grad GEMMs contract over the event axis — so
   the old 25-vs-7 pass bound no longer applies to this arm; expect ≥1.5×
   (typically ~2×) over the materialized fused path on the 2-core CPU CI
-  container, on top of its speedup over serial.  FASGD itself is
-  v-dependent (eq. 7, elementwise in v) and reports null for this arm; its
-  K× regime remains the accelerator path where the batched Pallas kernel
-  (`kernels/batched_update.py`) collapses the materialized reduction to one
-  HBM pass.
+  container, on top of its speedup over serial.  FASGD's v-dependent eq. 7
+  scale rides this arm through the `v_separable` ε-reparameterization
+  (lr/τ_k · 1/(v+ε), carried by the `reweight_by_v` pullback) — an
+  explicit fused_mode='cotangent' opt-in, so this arm is now populated for
+  fasgd too;
+* ``fused + use_fused_kernel`` (the ``kernel_*`` columns) — the one-kernel
+  event loop (`kernels/fused_event_apply.py`): gate→stats→coeff→accumulate
+  in a single launch per leaf per drained window.  Off-TPU it runs the
+  streaming XLA reference (same K+8-pass dataflow, no broadcast [K, P]
+  temporaries), so the CPU numbers measure the retired prefold path
+  against the one-kernel dataflow honestly; on TPU the same dispatch
+  compiles the Pallas body.
 
 Both fused arms first deduplicate the event batch by fetch timestamp
 (`engine.dedup_events`): clients that fetched at the same T hold
@@ -72,12 +79,14 @@ K_FUSED = 128
 
 
 def measure(params, ds, *, lam, events_per_step, apply_mode, n_batches,
-            rule="fasgd", fused_mode="materialized", seed=0, reps=5):
+            rule="fasgd", fused_mode="materialized", seed=0, reps=5,
+            use_fused_kernel=False):
     """Steady-state events/sec of the warm scan + one-time compile seconds."""
     k = events_per_step
     cfg = SimConfig(
         num_clients=lam, batch_size=MU, seed=seed,
-        server=ServerConfig(rule=rule, lr=0.005),
+        server=ServerConfig(rule=rule, lr=0.005,
+                            use_fused_kernel=use_fused_kernel),
         events_per_step=k, apply_mode=apply_mode, fused_mode=fused_mode,
     )
     state = init_sim(cfg, params)
@@ -105,6 +114,67 @@ def measure(params, ds, *, lam, events_per_step, apply_mode, n_batches,
     return round(best, 1), round(compile_s, 2)
 
 
+APPLY_SIZES = (784, 200, 10)   # the paper's MNIST MLP — big enough that the
+                               # apply path is memory-bound on the CI CPU
+
+
+def measure_apply_path(*, lam=256, num_events=128, quick=False, seed=0):
+    """Raw `engine.fused_apply` throughput, one-kernel vs the prefold path.
+
+    Isolates the server-apply dataflow the one-kernel rewrite targets (no
+    gradient compute, no dispatch): K pushed events with λ-spread staleness
+    against the paper's 784-200-10 MLP.  `use_fused_kernel=True` routes
+    through `kernels.fused_event_apply` (streaming XLA off-TPU — the same
+    K+8-pass dataflow the Pallas body pins on TPU); False is the prefolded
+    broadcast reduction it retires.  The acceptance gate is
+    one_kernel_vs_prefold >= 1.5 at λ=256 / K=128.
+    """
+    from repro.core import engine
+    from repro.core import rules as server_rules
+    K = num_events
+    params = init_mlp(jax.random.PRNGKey(seed), APPLY_SIZES)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1), 2)
+    grads = jax.tree.map(
+        lambda l: 0.05 * jax.random.normal(ks[0], (K,) + l.shape), params)
+    pushed = jnp.ones((K,), bool)
+    grad_ts = jax.random.randint(ks[1], (K,), 0, lam).astype(jnp.int32)
+    iters, reps = (10, 2) if quick else (30, 3)
+
+    def arm(use_kernel):
+        scfg = ServerConfig(rule="fasgd", lr=0.005,
+                            use_fused_kernel=use_kernel)
+        server = server_rules.init(scfg, params)._replace(
+            timestamp=jnp.int32(lam))
+        f = jax.jit(lambda s, g: engine.fused_apply(
+            scfg, s, g, pushed, grad_ts)[0].params)
+        jax.block_until_ready(f(server, grads))
+        best = 0.0
+        for _ in range(reps):
+            t0 = time.time()
+            for _ in range(iters):
+                out = f(server, grads)
+            jax.block_until_ready(out)
+            best = max(best, iters * K / (time.time() - t0))
+        return round(best, 1)
+
+    prefold = arm(False)
+    onek = arm(True)
+    out = {
+        "sizes": list(APPLY_SIZES),
+        "n_params": sum(l.size for l in jax.tree.leaves(params)),
+        "lam": lam,
+        "num_events": K,
+        "rule": "fasgd",
+        "prefold_events_per_sec": prefold,
+        "one_kernel_events_per_sec": onek,
+        "one_kernel_vs_prefold": round(onek / max(prefold, 1e-9), 2),
+    }
+    print(f"  apply-path (P={out['n_params']:,}, λ={lam}, K={K}): "
+          f"prefold={prefold:.1f} ev/s  one-kernel={onek:.1f} ev/s  "
+          f"({out['one_kernel_vs_prefold']:.2f}x)")
+    return out
+
+
 def run(lams=(4, 64, 256), rules=("fasgd", "sasgd"), fused_modes=("both",),
         quick=False, seed=0):
     fused_modes = (("materialized", "cotangent") if "both" in fused_modes
@@ -116,7 +186,11 @@ def run(lams=(4, 64, 256), rules=("fasgd", "sasgd"), fused_modes=("both",),
     reps = 3 if quick else 5
     rows = []
     for rule in rules:
-        cot_capable = get_rule(rule).coeffs_are_v_independent
+        r = get_rule(rule)
+        # v_separable rules (fasgd) ride the cotangent arm via the explicit
+        # fused_mode='cotangent' opt-in (ε-reparameterized eq. 7 scale)
+        cot_capable = r.coeffs_are_v_independent or r.v_separable
+        kernel_capable = r.batched_pallas_mode is not None
         for lam in lams:
             serial, cs = measure(
                 params, ds, lam=lam, events_per_step=1, apply_mode="serial",
@@ -134,6 +208,10 @@ def run(lams=(4, 64, 256), rules=("fasgd", "sasgd"), fused_modes=("both",),
                 "cotangent_compile_s": None,
                 "cotangent_speedup": None,
                 "cotangent_vs_materialized": None,
+                "kernel_events_per_sec": None,
+                "kernel_compile_s": None,
+                "kernel_speedup": None,
+                "kernel_vs_materialized": None,
             }
             if "materialized" in fused_modes:
                 fused, cf = measure(
@@ -143,6 +221,17 @@ def run(lams=(4, 64, 256), rules=("fasgd", "sasgd"), fused_modes=("both",),
                 row.update(
                     fused_events_per_sec=fused, fused_compile_s=cf,
                     speedup=round(fused / max(serial, 1e-9), 2))
+                if kernel_capable:
+                    kern, ck = measure(
+                        params, ds, lam=lam, events_per_step=K_FUSED,
+                        apply_mode="fused", fused_mode="materialized",
+                        n_batches=fused_batches, rule=rule, seed=seed,
+                        reps=reps, use_fused_kernel=True)
+                    row.update(
+                        kernel_events_per_sec=kern, kernel_compile_s=ck,
+                        kernel_speedup=round(kern / max(serial, 1e-9), 2),
+                        kernel_vs_materialized=round(
+                            kern / max(fused, 1e-9), 2))
             if "cotangent" in fused_modes and cot_capable:
                 cot, cc = measure(
                     params, ds, lam=lam, events_per_step=K_FUSED,
@@ -161,9 +250,13 @@ def run(lams=(4, 64, 256), rules=("fasgd", "sasgd"), fused_modes=("both",),
             print(f"  {rule:5s} λ={lam:<5} serial(K=1)={serial:8.1f} ev/s  "
                   f"fused/mat(K={K_FUSED})={fmt(row['fused_events_per_sec'])}"
                   f" ev/s  fused/cot={fmt(row['cotangent_events_per_sec'])}"
+                  f" ev/s  one-kernel={fmt(row['kernel_events_per_sec'])}"
                   f" ev/s  cot/mat="
                   + (f"{row['cotangent_vs_materialized']:.2f}x"
-                     if row["cotangent_vs_materialized"] else "-"))
+                     if row["cotangent_vs_materialized"] else "-")
+                  + "  kern/mat="
+                  + (f"{row['kernel_vs_materialized']:.2f}x"
+                     if row["kernel_vs_materialized"] else "-"))
     return rows
 
 
@@ -177,22 +270,43 @@ def main():
                                              "cotangent"],
                     default="both",
                     help="which fused arm(s) to measure against serial")
+    ap.add_argument("--assert-cotangent-fasgd", action="store_true",
+                    help="nightly regression gate: cotangent-fasgd "
+                         "throughput must be >= the materialized fused arm "
+                         "at the largest λ measured")
     args = ap.parse_args()
     rows = run(lams=tuple(args.lams), rules=tuple(args.rules),
                fused_modes=(args.fused_mode,), quick=args.quick)
+    apply_path = measure_apply_path(quick=args.quick)
     payload = {
         "model_sizes": list(SIZES),
         "batch_size": MU,
         "methodology": "steady-state: best of repeated invocations of the "
                        "same warm jit-compiled scan; compile reported "
                        "separately; fused arms: materialized [K,P] grads "
-                       "vs cotangent-weighted vjp (event dedup in both)",
+                       "vs cotangent-weighted vjp (event dedup in both) vs "
+                       "the one-kernel apply (use_fused_kernel); apply_path "
+                       "isolates raw engine.fused_apply throughput",
         "quick": args.quick,
         "fused_mode_arm": args.fused_mode,
+        "apply_path": apply_path,
         "rows": rows,
     }
     path = save_bench("BENCH_sim_throughput.json", payload)
     print(f"wrote {path} (and benchmarks/results/sim_throughput.json)")
+    if args.assert_cotangent_fasgd:
+        cells = [r for r in rows
+                 if r["rule"] == "fasgd"
+                 and r["cotangent_events_per_sec"]
+                 and r["fused_events_per_sec"]]
+        assert cells, "no fasgd cell measured both cotangent and materialized"
+        top = max(cells, key=lambda r: r["lam"])
+        assert top["cotangent_vs_materialized"] >= 1.0, (
+            f"cotangent-fasgd regressed below the materialized fused arm at "
+            f"λ={top['lam']}: {top['cotangent_events_per_sec']} < "
+            f"{top['fused_events_per_sec']} ev/s")
+        print(f"  assert ok: cotangent-fasgd {top['cotangent_vs_materialized']}x "
+              f"materialized at λ={top['lam']}")
     return 0
 
 

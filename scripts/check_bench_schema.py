@@ -57,16 +57,53 @@ SCHEMAS = {
             "fused_events_per_sec": ("optional", "number"),
             "fused_compile_s": ("optional", "number"),
             "speedup": ("optional", "number"),
-            # null for v-dependent rules (fasgd) or when the arm was skipped
+            # null for non-cotangent-capable rules or when the arm was
+            # skipped (fasgd rides it via the v_separable explicit opt-in)
             "cotangent_events_per_sec": ("optional", "number"),
             "cotangent_compile_s": ("optional", "number"),
             "cotangent_speedup": ("optional", "number"),
             "cotangent_vs_materialized": ("optional", "number"),
+            # null for rules without batched_pallas_mode / skipped arm
+            "kernel_events_per_sec": ("optional", "number"),
+            "kernel_compile_s": ("optional", "number"),
+            "kernel_speedup": ("optional", "number"),
+            "kernel_vs_materialized": ("optional", "number"),
         }),
+        # raw engine.fused_apply microbench: one-kernel vs prefold
+        # (acceptance: one_kernel_vs_prefold >= 1.5 at λ=256 / K=128)
+        "apply_path": {
+            "sizes": ("list", "int"),
+            "n_params": "int",
+            "lam": "int",
+            "num_events": "int",
+            "rule": "str",
+            "prefold_events_per_sec": "number",
+            "one_kernel_events_per_sec": "number",
+            "one_kernel_vs_prefold": "number",
+        },
     },
     "BENCH_kernels.json": {
         "fasgd_update": _KERNEL_ENTRY,
         "batched_update": dict(_KERNEL_ENTRY, num_events="int"),
+        # the one-kernel event loop vs the split (stats + prefold) path it
+        # retires; measured bytes come from XLA's compiled cost analysis
+        # (-1.0 when the backend has no cost model)
+        "one_kernel": {
+            "n_params": "int",
+            "num_events": "int",
+            "split_jit_us": "number",
+            "one_kernel_us": "number",
+            "measured_speedup": "number",
+            "split_measured_bytes": "number",
+            "one_kernel_measured_bytes": "number",
+            "hbm_model": dict(_HBM_MODEL, num_events="int"),
+            # present only on --interpret runs
+            "block_rows_sweep": ("optional", ("list", {
+                "block_rows": "int",
+                "interpret_us": "number",
+            })),
+            "allclose_vs_ref": "bool",
+        },
     },
     "BENCH_queue.json": {
         "model_sizes": ("list", "int"),

@@ -149,6 +149,12 @@ class TrainerConfig:
     # cotangent path never materializes), and an event-batched loss
     # (build_round_step's batched_loss_fn or grad_fn.event_batched).
     fused_mode: str = "auto"
+    # one-kernel apply tuning (kernels/fused_event_apply.py): force / forbid
+    # Pallas interpret mode (None = auto: env REPRO_KERNEL_INTERPRET, then
+    # platform), and override the block_rows tile height (0 = K-dependent
+    # table in kernels.ops.default_block_rows).
+    kernel_interpret: Optional[bool] = None
+    kernel_block_rows: int = 0
     # --- bounded server ingress queue (core/queue.py) ---
     # 0 = immediate apply; > 0 bounds how many pushed gradients the server
     # holds pending — each round the C pushes are admitted under

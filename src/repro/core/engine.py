@@ -15,14 +15,17 @@ This module is the single source of protocol truth both now consume:
    protocol with that arrival order;
  - **fused application** — one masked-sum update θ ← θ − Σ_c m_c·scale(v,τ_c)·g_c
    with a single stats step on the mean pushed gradient (`fused_apply`),
-   optionally routed through the batched Pallas scale-and-accumulate kernel
-   (`kernels/batched_update.py`) for rules that declare support;
+   optionally routed through the one-kernel event loop
+   (`kernels/fused_event_apply.py`: stats + delta in a single per-leaf
+   Pallas launch) for rules that declare `batched_pallas_mode`;
  - **cotangent fused application** — for rules whose fused coefficients are
    v-independent (`UpdateRule.coeffs_are_v_independent`: asgd/sasgd/exp/poly)
    the weight delta Σ_k w_k·g_k and the stats mean gradient are both vjps of
    the batched forward with per-event cotangent weights
    (`fused_apply_cotangent`) — the [K, P] per-event weight-gradient batch is
    never materialized (docs/ARCHITECTURE.md §"Cotangent fused path");
+   `v_separable` rules (fasgd) join via the `reweight_by_v` custom-vjp
+   pullback that carries the elementwise v-factor;
  - **event dedup** — clients that fetched at the same T hold bitwise-identical
    stale copies; `dedup_events` groups an event batch by that key so the
    stale-copy gather reads one distinct fleet row per group (a memory-
@@ -165,6 +168,11 @@ class Counters(NamedTuple):
     scenario_active_sum: jnp.ndarray  # float32 — Σ active clients per window
     scenario_windows: jnp.ndarray    # int32 — scenario windows accumulated
     queue_latency_wall_sum: jnp.ndarray  # float32 — Σ admission→drain wall
+    # one-kernel apply-path telemetry (kernels/fused_event_apply.py +
+    # kernels/fasgd_update.py; folded in by `count_kernel`, zero when
+    # `use_fused_kernel` is off)
+    kernel_launches: jnp.ndarray     # int32 — per-leaf kernel launches
+    kernel_events: jnp.ndarray       # int32 — events consumed by those windows
 
 
 def init_counters() -> Counters:
@@ -173,7 +181,7 @@ def init_counters() -> Counters:
     zf = jnp.zeros((), jnp.float32)
     return Counters(zero, zero, zero, zero, zf, zf, zf, zf,
                     zero, zero, zero, zero, zf, zero, zf, zero,
-                    zf, zero, zero, zf, zero, zf)
+                    zf, zero, zero, zf, zero, zf, zero, zero)
 
 
 def _acc_bytes(prev, amount):
@@ -207,6 +215,48 @@ def count_events(counters: Counters, push, fetch,
         fetch_bytes_total=_acc_bytes(counters.fetch_bytes_total,
                                      fetch_bytes_total),
     )
+
+
+def count_kernel(counters: Counters, launches, events) -> Counters:
+    """Fold one kernel-path application window into the telemetry.
+
+    `launches` is the number of per-leaf kernel launches the window staged
+    (n_leaves for one fused window; K·n_leaves for a serial scan whose every
+    event launches the per-leaf fasgd kernel), `events` the gradient events
+    the window consumed — events/launches·n_leaves is the amortization the
+    one-kernel path buys.  Call sites gate on the static predicates below so
+    the counters stay exactly zero (and are filtered from serialized
+    metrics) when the kernel path is off.
+    """
+    return counters._replace(
+        kernel_launches=(counters.kernel_launches
+                         + jnp.asarray(launches, jnp.int32)),
+        kernel_events=counters.kernel_events + jnp.asarray(events, jnp.int32),
+    )
+
+
+def fused_kernel_active(scfg: ServerConfig) -> bool:
+    """Static predicate: `fused_apply` routes through the one-kernel path.
+
+    Mirrors the dispatch inside `fused_apply`: the kernel consumes rules
+    with a `batched_pallas_mode` and no per-leaf gap tensors (gap-aware
+    rules declare `needs_client_params` and never set a mode, so the
+    rule flags alone decide).
+    """
+    rule = server_rules.get_rule(scfg.rule)
+    return bool(scfg.use_fused_kernel
+                and rule.batched_pallas_mode is not None
+                and not rule.needs_client_params)
+
+
+def serial_kernel_active(scfg: ServerConfig,
+                         per_tensor_tau: bool = False) -> bool:
+    """Static predicate: serial `apply_update` routes through the rule's
+    Pallas op (`UpdateRule._apply_pallas`) — matches the dispatch in
+    `UpdateRule.apply`."""
+    rule = server_rules.get_rule(scfg.rule)
+    return bool(scfg.use_fused_kernel and rule.pallas_op is not None
+                and not per_tensor_tau)
 
 
 # ---------------------------------------------------------------------------
@@ -357,8 +407,10 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
     Σ_c m_c·scale(v, τ_c)·g_c computed against the *post-stats* statistics
     via the registered rule's `scale_leaf`, and T advances by the number of
     pushes.  With `scfg.use_fused_kernel` and a rule that declares
-    `batched_pallas_mode`, the per-leaf reduction over the client axis runs
-    in one Pallas pass (`kernels/batched_update.py`).
+    `batched_pallas_mode`, the whole application runs as the one-kernel
+    event loop (`kernels/fused_event_apply.py`): one Pallas launch per leaf
+    fuses the statistics step and the weight delta, reading and writing
+    each leaf once per batch.
 
     Per-tensor mode (§5 extension): `push` may be a per-leaf bool pytree
     mirroring the params tree with [K] leaves (per-tensor push gating —
@@ -385,7 +437,32 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
         n_push = jnp.sum(any_leaf(push).astype(jnp.int32))
         n_push_leaf = jax.tree.map(
             lambda m: jnp.sum(m.astype(jnp.int32)), pushf)
-        if track_stats:
+    else:
+        n_push = jnp.sum(push.astype(jnp.int32))
+        pushf = push.astype(jnp.float32)
+
+    gap = None
+    if rule.needs_client_params and client_params is not None:
+        # per-client parameter-space divergence θ_T − θ_ts, leaves [K, ...]
+        gap = jax.tree.map(
+            lambda sp, cp: sp[None].astype(jnp.float32)
+            - cp.astype(jnp.float32),
+            server.params, client_params)
+
+    # One-kernel dispatch (kernels/fused_event_apply.py): stats step + weight
+    # delta in a single per-leaf launch, each leaf read once and written once
+    # per event batch.  The kernel owns the statistics step only when the
+    # rule uses the shared eq. 4-6 moving averages with no `extra` state to
+    # merge; otherwise the XLA stats block below runs first and the kernel
+    # applies the delta alone (its track_stats=False pass-through).
+    use_kernel = (scfg.use_fused_kernel
+                  and rule.batched_pallas_mode is not None and gap is None)
+    kernel_stats = (
+        use_kernel and track_stats and server.extra is None
+        and type(rule).update_stats is server_rules.UpdateRule.update_stats)
+
+    if track_stats and not kernel_stats:
+        if per_leaf_push:
             mean_g = jax.tree.map(
                 lambda m, g, n: jnp.einsum("c,c...->...", m, g)
                 / jnp.maximum(n, 1),
@@ -400,10 +477,7 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
                 extra=_merge_extra(server.extra, stats_state.extra,
                                    has_push_leaf, server.params, any_push),
             )
-    else:
-        n_push = jnp.sum(push.astype(jnp.int32))
-        pushf = push.astype(jnp.float32)
-        if track_stats:
+        else:
             mean_g = jax.tree.map(
                 lambda g: jnp.einsum("c,c...->...", pushf, g)
                 / jnp.maximum(n_push, 1),
@@ -428,37 +502,48 @@ def fused_apply(scfg: ServerConfig, server: ServerState, grads, push,
     m_leaves = (jax.tree.leaves(pushf) if per_leaf_push
                 else [pushf] * n_leaves)
 
-    gap = None
-    if rule.needs_client_params and client_params is not None:
-        # per-client parameter-space divergence θ_T − θ_ts, leaves [K, ...]
-        gap = jax.tree.map(
-            lambda sp, cp: sp[None].astype(jnp.float32)
-            - cp.astype(jnp.float32),
-            server.params, client_params)
-
     treedef = jax.tree.structure(server.params)
-    if (scfg.use_fused_kernel and rule.batched_pallas_mode is not None
-            and gap is None):
-        from repro.kernels.ops import batched_scale_apply
-        taus_arg = jax.tree.unflatten(treedef, t_leaves)
+    if use_kernel:
+        # One-kernel event loop: per leaf, ONE launch consumes the whole
+        # batch — push mask, dedup count weighting, and rule coefficient
+        # pre-folded into the SMEM weight vector ('coeff' mode), or the
+        # mask alone with fasgd's eq. 7 scale computed in-kernel against
+        # the resident post-stats v tile ('fasgd' mode).  When
+        # `kernel_stats`, the same launch also advances n/b/v with the
+        # mean pushed gradient, so the leaf never round-trips HBM between
+        # the statistics step and the delta.
+        from repro.kernels.ops import fused_event_apply
         if rule.batched_pallas_mode == "coeff":
-            # v-independent scale: fold the push mask (and any dedup count
-            # weighting the caller applied) into one per-event weight vector
-            # — a single SMEM operand per leaf launch instead of two.
-            weights = jax.tree.unflatten(
-                treedef, [rule.fused_coeffs(scfg, t) * m
-                          for t, m in zip(t_leaves, m_leaves)])
-            new_params = batched_scale_apply(
-                server.params, grads, server.v, weights, taus_arg,
-                masks=None, lr=scfg.lr, eps=scfg.eps, mode="coeff")
+            w_leaves = [rule.fused_coeffs(scfg, t) * m
+                        for t, m in zip(t_leaves, m_leaves)]
         else:
-            coeffs = jax.tree.unflatten(
-                treedef, [jnp.ones_like(t) for t in t_leaves])
-            masks = jax.tree.unflatten(treedef, m_leaves)
-            new_params = batched_scale_apply(
-                server.params, grads, server.v, coeffs, taus_arg,
-                masks=masks, lr=scfg.lr, eps=scfg.eps,
-                mode=rule.batched_pallas_mode)
+            w_leaves = m_leaves
+        if per_leaf_push:
+            np_leaves = jax.tree.leaves(n_push_leaf)
+            wm_leaves = [m / jnp.maximum(c, 1)
+                         for m, c in zip(m_leaves, np_leaves)]
+            hp_leaves = [c > 0 for c in np_leaves]
+        else:
+            wm_leaves = [pushf / jnp.maximum(n_push, 1)] * n_leaves
+            hp_leaves = [n_push > 0] * n_leaves
+        unfl = lambda ls: jax.tree.unflatten(treedef, ls)
+        f32 = lambda tr: jax.tree.map(
+            lambda l: l.astype(jnp.float32), tr)
+        new_params, n_new, b_new, v_new = fused_event_apply(
+            server.params, grads, f32(server.n), f32(server.b),
+            f32(server.v), unfl(w_leaves), unfl(wm_leaves),
+            unfl(t_leaves), unfl(hp_leaves), lr=scfg.lr,
+            gamma=scfg.gamma, beta=scfg.beta, eps=scfg.eps,
+            variant=scfg.variant, mode=rule.batched_pallas_mode,
+            track_stats=kernel_stats,
+            block_rows=scfg.kernel_block_rows,
+            interpret=scfg.kernel_interpret)
+        if kernel_stats:
+            cast = lambda new, old: jax.tree.map(
+                lambda a, o: a.astype(o.dtype), new, old)
+            server = server._replace(
+                n=cast(n_new, server.n), b=cast(b_new, server.b),
+                v=cast(v_new, server.v))
     elif rule.batched_pallas_mode == "coeff" and gap is None:
         # v-independent scale: the delta is a plain weighted sum over the
         # event axis — one contraction per leaf, no [K, *s] scale tensor.
@@ -560,6 +645,35 @@ def dedup_events(ts):
     return rep, counts, is_rep
 
 
+@jax.custom_vjp
+def reweight_by_v(W, vfac):
+    """Identity in `W` whose pullback scales cotangents elementwise by `vfac`.
+
+    The fused delta of a `v_separable` rule factorizes as
+    Δθ = vfac(v) ⊙ Σ_k w_k·g_k with per-event scalars w_k (fasgd:
+    w_k = m_k·lr/τ_k, vfac = 1/(v+ε) — eq. 7 up to the documented
+    ε-reparameterization).  Because this pullback is elementwise-linear it
+    commutes with the event-axis contraction, so applying it to the
+    already-contracted raw delta is exact: `fused_apply_cotangent` runs the
+    batched backward once with the scalar weights, then pulls the result
+    through `vjp(lambda W: reweight_by_v(W, vfac))` against the POST-stats
+    v — the [K, P] per-event gradient batch is still never materialized.
+    """
+    return W
+
+
+def _reweight_by_v_fwd(W, vfac):
+    return W, vfac
+
+
+def _reweight_by_v_bwd(vfac, ct):
+    return (jax.tree.map(lambda f, c: (f * c).astype(c.dtype), vfac, ct),
+            jax.tree.map(jnp.zeros_like, vfac))
+
+
+reweight_by_v.defvjp(_reweight_by_v_fwd, _reweight_by_v_bwd)
+
+
 def fused_apply_cotangent(scfg: ServerConfig, server: ServerState,
                           event_losses, stale_params, push, client_ts):
     """Fused application via cotangent-weighted vjps — no [K, P] grad batch.
@@ -570,7 +684,11 @@ def fused_apply_cotangent(scfg: ServerConfig, server: ServerState,
         Δθ = Σ_k m_k·c(τ_k)·g_k      and      ḡ = Σ_k m_k·g_k / n_push,
 
     both linear in the per-event gradients — so both are pullbacks of the
-    batched forward with per-event cotangent weights.  `event_losses(W,
+    batched forward with per-event cotangent weights.  `v_separable` rules
+    (fasgd) ride the same machinery: their scale factorizes as a per-event
+    scalar times one elementwise v-factor, so the contraction runs with the
+    scalar coefficients and the v-factor applies afterwards through the
+    `reweight_by_v` pullback against the post-stats v.  `event_losses(W,
     deltas) -> [K]` evaluates every event's loss with its stale parameters
     expressed as p_k = W + δ_k, δ_k = stop_gradient(p_k − W) (`deltas`
     leaves [K, ...] are built here from `stale_params`); the vjp w.r.t. W
@@ -591,10 +709,12 @@ def fused_apply_cotangent(scfg: ServerConfig, server: ServerState,
     Returns (server, taus [K], losses [K]).
     """
     rule = server_rules.get_rule(scfg.rule)
-    if not (rule.supports_fused and rule.coeffs_are_v_independent):
+    if not (rule.supports_fused
+            and (rule.coeffs_are_v_independent or rule.v_separable)):
         raise ValueError(
             f"rule {scfg.rule!r} does not support the cotangent fused path "
-            f"(needs supports_fused and coeffs_are_v_independent)")
+            f"(needs supports_fused and coeffs_are_v_independent or "
+            f"v_separable)")
     if is_per_leaf(push, server.params) or is_per_leaf(client_ts,
                                                       server.params):
         raise ValueError(
@@ -622,6 +742,15 @@ def fused_apply_cotangent(scfg: ServerConfig, server: ServerState,
         server = tree_where(n_push > 0, stats_state, server)
     else:
         delta = pullback(w_delta)[0]
+    if not rule.coeffs_are_v_independent:
+        # v_separable rules (fasgd): the per-event coefficients above carry
+        # only the scalar part (lr/τ_k); the elementwise v-factor 1/(v+ε)
+        # applies once, against the post-stats v, via the re-weighting
+        # pullback (exact — see `reweight_by_v`).
+        vfac = rule.fused_vfactor(scfg, server.v)
+        _, rw_pullback = jax.vjp(
+            lambda W: reweight_by_v(W, vfac), server.params)
+        delta = rw_pullback(delta)[0]
     new_params = jax.tree.map(jnp.subtract, server.params, delta)
     server = server._replace(
         params=new_params, timestamp=server.timestamp + n_push)

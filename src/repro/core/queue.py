@@ -271,6 +271,23 @@ def dequeue(q: QueueState, k):
     return q._replace(head=(q.head + k) % cap, size=q.size - k), batch
 
 
+def drained_push_arg(batch: Drained, per_tensor_push: bool):
+    """The `pushed` argument that feeds a drained window straight to apply.
+
+    This is the queue→kernel seam: `engine.fused_apply` consumes a whole
+    drained window in one shot (one Pallas launch per leaf when the
+    one-kernel path is on), and the only per-event masking it needs is this
+    push argument — ``valid`` alone under whole-copy gating, or ``valid``
+    folded into the per-leaf masks under per-tensor (§5) gating.  Invalid
+    rows (stale ring garbage past the drain count) are thereby weighted
+    zero inside the kernel rather than sliced out, keeping the batch shape
+    static under `jax.lax.scan`.
+    """
+    if per_tensor_push:
+        return jax.tree.map(lambda m: m & batch.valid, batch.leaf_mask)
+    return batch.valid
+
+
 def count_queue(counters: Counters, *, enqueued, rejected, dropped, drained,
                 depth_post, depth_peak, latency_sum,
                 latency_wall_sum=None) -> Counters:

@@ -97,6 +97,8 @@ def server_config(tc: TrainerConfig) -> ServerConfig:
         variant=tc.variant, num_clients=tc.num_round_clients,
         use_fused_kernel=tc.use_fused_kernel,
         kasync_k=tc.kasync_k,
+        kernel_interpret=tc.kernel_interpret,
+        kernel_block_rows=tc.kernel_block_rows,
     )
 
 
@@ -230,10 +232,15 @@ def build_round_step(
             # this module's opaque batch argument by splatting the tuple
             batched_losses = lambda W, deltas, batch: attached(
                 W, deltas, *batch)
+    # v_separable rules (fasgd's ε-reparameterized eq. 7) ride the cotangent
+    # path only on explicit request — 'auto' never silently picks the
+    # ~1e-8-approximate scale (mirrors SimConfig.cotangent_eligible).
     use_cotangent = (
         apply_mode == "fused"
         and tc.fused_mode in ("auto", "cotangent")
-        and rule.supports_fused and rule.coeffs_are_v_independent
+        and rule.supports_fused
+        and (rule.coeffs_are_v_independent
+             or (rule.v_separable and tc.fused_mode == "cotangent"))
         and not tc.per_tensor_push and not tc.per_tensor_fetch
         and tc.drop_policy == "discard"
         and not tc.use_fused_kernel
@@ -242,8 +249,8 @@ def build_round_step(
     if tc.fused_mode == "cotangent" and not use_cotangent:
         raise ValueError(
             "fused_mode='cotangent' needs apply_mode='fused', a "
-            "coeffs_are_v_independent rule, whole-copy gating, "
-            "drop_policy='discard', use_fused_kernel=False, and an "
+            "coeffs_are_v_independent (or v_separable) rule, whole-copy "
+            "gating, drop_policy='discard', use_fused_kernel=False, and an "
             "event-batched loss (batched_loss_fn or grad_fn.event_batched)")
 
     def round_step(state: RoundState, batch, key):
@@ -340,9 +347,7 @@ def build_round_step(
                               for i in range(qbatch.leaf_ts.shape[1])])
             else:
                 q_ts = qbatch.ts
-            q_push = (jax.tree.map(lambda m: m & qbatch.valid,
-                                   qbatch.leaf_mask)
-                      if tc.per_tensor_push else qbatch.valid)
+            q_push = qlib.drained_push_arg(qbatch, tc.per_tensor_push)
             q_cp = qbatch.payload.get("copy")
             if apply_mode == "serial":
                 server, taus = engine.serial_apply(
@@ -439,6 +444,17 @@ def build_round_step(
                 rejected=n_rejected, dropped=n_dropped, drained=k_eff,
                 depth_post=queue.size, depth_peak=depth_peak,
                 latency_sum=latency_sum)
+        # kernel-path telemetry (one launch per leaf per fused window; per
+        # scanned event on the serial path) — same folds as sim/fred.py
+        if apply_mode == "fused" and not use_cotangent \
+                and engine.fused_kernel_active(scfg):
+            counters = engine.count_kernel(
+                counters, n_leaves, k_eff if use_queue else C)
+        elif apply_mode == "serial" \
+                and engine.serial_kernel_active(scfg, tc.per_tensor_fetch):
+            rows = qbatch.valid.shape[0] if use_queue else C
+            counters = engine.count_kernel(
+                counters, rows * n_leaves, k_eff if use_queue else C)
         if use_scenario:
             # a sync rule's round ends at its partial barrier (the K-th
             # arrival); an async round is charged the full straggler t_(C)

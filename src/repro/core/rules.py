@@ -98,10 +98,19 @@ class ServerConfig:
     num_clients: int = 1        # ssgd needs to know when a round is complete
     use_fused_kernel: bool = False  # route updates through a rule's Pallas op
     kasync_k: int = 0           # kasync partial-barrier K (0 → num_clients)
+    # Pallas execution toggles (kernels/ops.py): force interpret-mode (True;
+    # the kernel body runs on CPU for CI correctness), force native compile
+    # (False), or auto (None — native on TPU, interpret / XLA-streaming
+    # fallback elsewhere; overridable via REPRO_KERNEL_INTERPRET).
+    kernel_interpret: Optional[bool] = None
+    kernel_block_rows: int = 0  # 0 → the per-K tuned table (ops.default_block_rows)
 
     def __post_init__(self):
         get_rule(self.rule)     # raises KeyError for unregistered names
         assert self.variant in ("intent", "literal"), self.variant
+        if self.kernel_block_rows < 0:
+            raise ValueError(
+                f"kernel_block_rows={self.kernel_block_rows} must be >= 0")
         if self.kasync_k < 0:
             raise ValueError(f"kasync_k={self.kasync_k} must be >= 0")
         if self.kasync_k > max(self.num_clients, 1):
@@ -270,6 +279,18 @@ class UpdateRule:
     # for fasgd (scale is elementwise in v, eq. 7) and gap (scale needs the
     # per-leaf parameter gap).
     coeffs_are_v_independent: bool = False
+    # Weaker property: the fused scale factorizes as
+    # scale(v, τ_k) = fused_coeffs(τ_k) · fused_vfactor(v) — a per-event
+    # scalar times ONE elementwise v-factor shared by the whole batch.  True
+    # for fasgd via an ε-reparameterization: lr/(τ_k·(v+ε)) = lr/(v·τ_k +
+    # ε·τ_k) ≈ eq. 7's lr/(v·τ_k + ε) with relative error ≤ ε/(v+ε) ~ 1e-8.
+    # Lets `fused_apply_cotangent` serve v-dependent rules: the per-event
+    # contraction runs with the scalar coefficients, then a custom-vjp
+    # re-weighting pullback applies the v-factor against the post-stats v —
+    # still no [K, P] materialization.  Because it is ≈ (not bitwise) the
+    # materialized reduction, fused_mode='auto' never picks it; only the
+    # explicit 'cotangent' opt-in does.
+    v_separable: bool = False
 
     def barrier_k(self, config: ServerConfig) -> int:
         """Round size K of a synchronous rule's (partial) barrier.
@@ -288,6 +309,14 @@ class UpdateRule:
         `taus` is a [K] float32 staleness vector (engine-computed via
         `step_staleness`); the result multiplies each event's gradient in the
         fused reduction Σ_k m_k·coeff_k·g_k.
+        """
+        raise NotImplementedError(self.name)
+
+    def fused_vfactor(self, config: ServerConfig, v):
+        """Elementwise v-factor pytree for `v_separable` rules.
+
+        Multiplies the coefficient-weighted fused delta once per leaf
+        (post-stats v); see `v_separable` and `engine.fused_apply_cotangent`.
         """
         raise NotImplementedError(self.name)
 
@@ -430,10 +459,25 @@ class FasgdRule(UpdateRule):
     requires_stats = True
     pallas_op = "fasgd_update"
     batched_pallas_mode = "fasgd"
+    v_separable = True
 
     def scale_leaf(self, config, v, tau, extra=None, gap=None):
         """α/(v·τ + ε) elementwise in the std moving average v (eq. 7)."""
         return config.lr / (v * jnp.asarray(tau, jnp.float32) + config.eps)
+
+    def fused_coeffs(self, config, taus):
+        """ε-reparameterized per-event factor α/τ_k (v_separable split).
+
+        Together with `fused_vfactor` this gives α/(τ_k·(v+ε)) =
+        α/(v·τ_k + ε·τ_k), eq. 7 with its ε guard scaled by τ_k — relative
+        error ≤ ε/(v+ε) ~ 1e-8, far inside fused-path test tolerances.
+        """
+        return config.lr / jnp.asarray(taus, jnp.float32)
+
+    def fused_vfactor(self, config, v):
+        """Elementwise 1/(v+ε) against the post-stats std MA (eq. 7)."""
+        return jax.tree.map(
+            lambda l: 1.0 / (l.astype(jnp.float32) + config.eps), v)
 
     def _apply_pallas(self, config, state, grad, tau, tau_scalar):
         # Pallas fast path: eqs. 4-8 fused into one HBM pass per leaf
@@ -446,7 +490,9 @@ class FasgdRule(UpdateRule):
         new_params, n_new, b_new, v_new = fasgd_update(
             state.params, grad, n32, b32, v32, config.lr, tau,
             gamma=config.gamma, beta=config.beta, eps=config.eps,
-            variant=config.variant)
+            variant=config.variant,
+            block_rows=config.kernel_block_rows or 256,
+            interpret=config.kernel_interpret)
         cast = lambda new, old: jax.tree.map(
             lambda a, o: a.astype(o.dtype), new, old)
         new_state = state._replace(

@@ -2,10 +2,15 @@
 
 On CPU (this container) the kernels execute in `interpret=True` mode for
 correctness; on TPU they compile natively.  `interpret=None` means
-auto-detect.
+auto-detect; the ``REPRO_KERNEL_INTERPRET`` env var (1/0, true/false)
+overrides the auto-detection for every kernel at once — CI's kernel jobs
+set it to exercise the Pallas bodies on the CPU matrix without editing
+configs.  `ServerConfig.kernel_interpret` carries the same toggle
+per-config and is threaded here by the engine/rule call sites.
 """
 from __future__ import annotations
 
+import os
 from typing import Any
 
 import jax
@@ -14,15 +19,43 @@ import jax.numpy as jnp
 from repro.kernels import batched_update as _bk
 from repro.kernels import fasgd_update as _fk
 from repro.kernels import flash_attention as _fa
-from repro.kernels.ref import attention_ref
+from repro.kernels import fused_event_apply as _fe
+from repro.kernels.ref import attention_ref, fused_event_apply_ref
 
 LANES = _fk.LANES
 
 
+def _env_interpret():
+    """Tri-state REPRO_KERNEL_INTERPRET override: True / False / unset."""
+    val = os.environ.get("REPRO_KERNEL_INTERPRET", "").strip().lower()
+    if val in ("1", "true", "yes", "on"):
+        return True
+    if val in ("0", "false", "no", "off"):
+        return False
+    return None
+
+
 def _auto_interpret(interpret):
+    if interpret is None:
+        interpret = _env_interpret()
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
+
+
+# `fused_event_apply` row-block tuning table, keyed by event count K: the
+# [K, rows, 128] gradient block must fit VMEM alongside the five leaf tiles,
+# so deeper event batches take narrower row blocks.  Measured by the
+# `block_rows` sweep in benchmarks/kernels.py; override per-config with
+# ServerConfig.kernel_block_rows.
+_BLOCK_ROWS_TABLE = ((8, 512), (32, 256), (128, 64), (512, 16))
+
+
+def default_block_rows(num_events: int) -> int:
+    for k, rows in _BLOCK_ROWS_TABLE:
+        if num_events <= k:
+            return rows
+    return 8
 
 
 def _pad_to_tiles(x: jax.Array, block_rows: int):
@@ -129,6 +162,97 @@ def batched_scale_apply(params: Any, grads: Any, v: Any, coeffs, taus,
         jax.tree.leaves(params), jax.tree.leaves(grads), jax.tree.leaves(v),
         coeff_leaves, tau_leaves, mask_leaves)]
     return jax.tree.unflatten(params_def, outs)
+
+
+def _fused_event_path(interpret) -> str:
+    """Dispatch for `fused_event_apply`: 'pallas' | 'interpret' | 'xla'.
+
+    Explicit True forces the Pallas kernel in interpret mode (CPU-testable
+    kernel body — CI correctness); explicit False forces the native compile;
+    None auto-detects — native Pallas on TPU, otherwise the XLA streaming
+    reference (`ref.fused_event_apply_ref`), which has the same semantics
+    but realistic off-TPU *timing* (interpret mode is an emulator, far too
+    slow to benchmark).
+    """
+    if interpret is None:
+        interpret = _env_interpret()
+    if interpret is True:
+        return "interpret"
+    if interpret is False:
+        return "pallas"
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def fused_event_apply(params: Any, grads: Any, n: Any, b: Any, v: Any,
+                      weights, wmean, taus, has_push, *, lr,
+                      gamma=0.9, beta=0.9, eps=1e-8, variant="intent",
+                      mode="fasgd", track_stats=True, block_rows: int = 0,
+                      interpret: bool | None = None):
+    """One-kernel K-event server apply over arbitrary pytrees.
+
+    Per leaf, ONE launch of `fused_event_apply.fused_event_apply_2d`
+    consumes the whole event batch: the mean-gradient statistics step
+    (eqs. 4-6, skipped when `track_stats=False`), then the weighted delta —
+    per-event SMEM weight alone ('coeff' mode: mask × rule coefficient
+    pre-folded by the engine) or fasgd's in-kernel eq. 7 scale against the
+    post-stats v tile ('fasgd' mode).
+
+    `grads` leaves carry a leading [K] event axis; `weights`/`wmean`/`taus`
+    are [K] vectors and `has_push` a bool scalar — each either shared for
+    the whole tree or a per-leaf pytree mirroring `params` (per-tensor
+    gating / per-tensor staleness).  `n`/`b`/`v` must be float32 (the
+    engine casts); returns (params', n', b', v') with statistics in
+    float32.  `block_rows=0` uses the per-K tuned table
+    (`default_block_rows`); `interpret` dispatches per `_fused_event_path`.
+    """
+    path = _fused_event_path(interpret)
+    K = jax.tree.leaves(grads)[0].shape[0]
+    rows = block_rows or default_block_rows(K)
+    # Bound the [K, rows, 128] gradient block to ~4 MB of VMEM.
+    rows_budget = max(8, (4 << 20) // (LANES * 4 * max(K, 1)))
+    rows = min(rows, 1 << (rows_budget.bit_length() - 1))
+
+    params_def = jax.tree.structure(params)
+
+    def per_leaf(x):
+        """Broadcast a shared [K] vector / scalar to one entry per leaf."""
+        if jax.tree.structure(x) == params_def:
+            return jax.tree.leaves(x)
+        return [x] * params_def.num_leaves
+
+    w_l, wm_l, t_l, hp_l = (per_leaf(weights), per_leaf(wmean),
+                            per_leaf(taus), per_leaf(has_push))
+
+    def one(p, g, nn, bb, vv, w, wm, t, hp):
+        kw = dict(gamma=gamma, beta=beta, eps=eps, variant=variant,
+                  mode=mode, track_stats=track_stats)
+        if path == "xla":
+            return fused_event_apply_ref(p, g, nn, bb, vv, w, wm, t, lr, hp,
+                                         **kw)
+        shape, dtype = p.shape, p.dtype
+        (p2, _), (n2, _), (b2, _), (v2, _) = (
+            _pad_to_tiles(p, rows), _pad_to_tiles(nn, rows),
+            _pad_to_tiles(bb, rows), _pad_to_tiles(vv, rows))
+        gflat = g.reshape(K, -1)
+        pad = p2.shape[0] * LANES - gflat.shape[1]
+        if pad:
+            gflat = jnp.pad(gflat, ((0, 0), (0, pad)))
+        g2 = gflat.reshape(K, -1, LANES)
+        block = min(rows, p2.shape[0])
+        po, no, bo, vo = _fe.fused_event_apply_2d(
+            p2, g2, n2, b2, v2, w, wm, t, lr, hp,
+            block_rows=block, interpret=(path == "interpret"), **kw)
+        size = p.size
+        unpad = lambda a: a.reshape(-1)[:size].reshape(shape)
+        return unpad(po).astype(dtype), unpad(no), unpad(bo), unpad(vo)
+
+    outs = [one(*leaves) for leaves in zip(
+        jax.tree.leaves(params), jax.tree.leaves(grads),
+        jax.tree.leaves(n), jax.tree.leaves(b), jax.tree.leaves(v),
+        w_l, wm_l, t_l, hp_l)]
+    unzip = tuple(jax.tree.unflatten(params_def, [o[i] for o in outs])
+                  for i in range(4))
+    return unzip  # (params, n, b, v)
 
 
 def attention(q, k, v, *, causal=True, window=0, sm_scale=None,

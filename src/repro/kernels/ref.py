@@ -25,6 +25,55 @@ def fasgd_update_ref(params, grads, n, b, v, lr, tau,
     return p_new, n_new, b_new, v_new
 
 
+def fused_event_apply_ref(params, grads, n, b, v, weights, wmean, taus, lr,
+                          has_push, *, gamma=0.9, beta=0.9, eps=1e-8,
+                          variant="intent", mode="fasgd", track_stats=True):
+    """Streaming oracle for `kernels.fused_event_apply` on one leaf.
+
+    Exactly the kernel's math over a K-event batch — the mean-gradient
+    statistics step (eqs. 4-6, held still when nothing pushed), then the
+    weighted delta against the POST-stats v — expressed as XLA-friendly
+    contractions: the event axis is either contracted by einsum ('coeff'
+    mode) or streamed through a `fori_loop` ('fasgd' mode, whose elementwise
+    eq. 7 scale lr/(v'·τ_k+ε) cannot be pre-folded into a scalar), never
+    broadcast to a [K, *shape] intermediate.  This makes it both the
+    correctness oracle for the Pallas kernel and the off-TPU fast path:
+    gradient traffic is K leaf-sized reads instead of ~5K broadcast temps.
+
+    `grads` is [K, *shape]; `weights`/`wmean`/`taus` are [K]; returns
+    (params', n', b', v') with the statistics in float32.
+    """
+    g32 = grads.astype(jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    t = jnp.asarray(taus, jnp.float32)
+    lr = jnp.asarray(lr, jnp.float32)
+    if track_stats:
+        gbar = jnp.einsum("k,k...->...", jnp.asarray(wmean, jnp.float32), g32)
+        n1 = gamma * n + (1.0 - gamma) * gbar * gbar
+        b1 = gamma * b + (1.0 - gamma) * gbar
+        std = jnp.sqrt(jnp.maximum(n1 - b1 * b1, 0.0) + eps)
+        if variant == "intent":
+            v1 = beta * v + (1.0 - beta) * std
+        else:
+            v1 = beta * v + (1.0 - beta) / std
+        keep = jnp.asarray(has_push, bool)
+        n1 = jnp.where(keep, n1, n)
+        b1 = jnp.where(keep, b1, b)
+        v1 = jnp.where(keep, v1, v)
+    else:
+        n1, b1, v1 = n, b, v
+    if mode == "coeff":
+        delta = jnp.einsum("k,k...->...", w, g32)
+    else:
+        def body(k, acc):
+            scale = lr / (v1 * t[k] + eps)
+            return acc + w[k] * scale * g32[k]
+        delta = jax.lax.fori_loop(
+            0, grads.shape[0], body, jnp.zeros(g32.shape[1:], jnp.float32))
+    p1 = (params.astype(jnp.float32) - delta).astype(params.dtype)
+    return p1, n1, b1, v1
+
+
 def attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
     """Reference GQA attention with causal/sliding-window masks.
 

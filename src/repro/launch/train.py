@@ -80,6 +80,19 @@ def main():
     ap.add_argument("--kasync-k", type=int, default=0,
                     help="partial-barrier K for --rule kasync "
                          "(0 = clients // 2 when the rule is kasync)")
+    ap.add_argument("--use-fused-kernel", action="store_true",
+                    help="route the server apply through the one-kernel "
+                         "Pallas path (kernels/fused_event_apply.py); on "
+                         "CPU it runs the streaming XLA reference unless "
+                         "REPRO_KERNEL_INTERPRET/--kernel-interpret forces "
+                         "interpret mode")
+    ap.add_argument("--kernel-interpret", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="Pallas interpret-mode toggle for the kernel path "
+                         "(auto = env REPRO_KERNEL_INTERPRET, then platform)")
+    ap.add_argument("--kernel-block-rows", type=int, default=0,
+                    help="tile height for the one-kernel apply "
+                         "(0 = K-dependent tuning table)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -103,6 +116,10 @@ def main():
         queue_capacity=args.queue_capacity, drain_policy=args.drain_policy,
         drain_k=args.drain_k, admission_policy=args.admission_policy,
         scenario=scn, kasync_k=kasync_k,
+        use_fused_kernel=args.use_fused_kernel,
+        kernel_interpret=(None if args.kernel_interpret == "auto"
+                          else args.kernel_interpret == "on"),
+        kernel_block_rows=args.kernel_block_rows,
         seed=args.seed,
     )
     mesh = make_host_mesh(data=len(jax.devices()))
@@ -165,6 +182,15 @@ def main():
                   f"peak {int(cnt.queue_depth_peak)}, "
                   f"mean latency "
                   f"{float(cnt.queue_latency_sum) / max(int(cnt.queue_drained), 1):.2f} T-ticks")
+        if args.use_fused_kernel:
+            n_leaves = len(jax.tree.leaves(state.server.params))
+            launches = int(cnt.kernel_launches)
+            windows = launches // max(n_leaves, 1)
+            events = int(cnt.kernel_events)
+            print(f"[train] kernel: {launches} launches "
+                  f"({windows} apply windows x {n_leaves} leaves), "
+                  f"{events} events consumed "
+                  f"({events / max(windows, 1):.1f} events/window)")
         if scn is not None:
             rounds = max(int(cnt.scenario_windows), 1)
             k_used = (tc.kasync_k or C) if server_rules.get_rule(

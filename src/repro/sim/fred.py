@@ -135,23 +135,40 @@ class SimConfig:
     # gives every run a modeled wall-clock axis (docs/SCENARIOS.md).
     scenario: Optional[scen.ScenarioConfig] = None
 
-    def cotangent_eligible(self) -> bool:
-        """True iff the cotangent fused path can serve this configuration.
+    def cotangent_serviceable(self) -> bool:
+        """True iff `fused_apply_cotangent` can serve this configuration.
 
-        Needs a rule with v-independent fused coefficients, whole-copy
-        (non-per-tensor) gating, no server-side gradient cache (the cache
-        stores per-event gradients the cotangent path never materializes),
-        and the XLA reduction (`use_fused_kernel` selects the Pallas
-        materialized kernel instead).
+        Needs a rule whose fused scale rides the cotangent machinery —
+        v-independent coefficients, or the weaker `v_separable` split
+        (fasgd's ε-reparameterized lr/τ_k · 1/(v+ε), applied through the
+        `reweight_by_v` pullback) — plus whole-copy (non-per-tensor)
+        gating, no server-side gradient cache (the cache stores per-event
+        gradients the cotangent path never materializes), and the XLA
+        reduction (`use_fused_kernel` selects the one-kernel materialized
+        path instead).
         """
         rule = server_rules.get_rule(self.server.rule)
         use_cache = (self.bandwidth.c_push > 0
                      and self.bandwidth.drop_policy == "cache")
-        return (rule.supports_fused and rule.coeffs_are_v_independent
+        return (rule.supports_fused
+                and (rule.coeffs_are_v_independent or rule.v_separable)
                 and not self.bandwidth.per_tensor_push
                 and not self.bandwidth.per_tensor_fetch
                 and not use_cache
                 and not self.server.use_fused_kernel)
+
+    def cotangent_eligible(self) -> bool:
+        """True iff fused_mode='auto' resolves to the cotangent path.
+
+        Stricter than `cotangent_serviceable`: 'auto' promises numerical
+        parity with the materialized reduction, so only rules with exactly
+        v-independent coefficients qualify — `v_separable` rules (fasgd)
+        carry a documented ε-reparameterization and are served only by the
+        explicit fused_mode='cotangent' opt-in.
+        """
+        return (self.cotangent_serviceable()
+                and server_rules.get_rule(
+                    self.server.rule).coeffs_are_v_independent)
 
     def __post_init__(self):
         assert self.dispatcher in ("uniform", "roundrobin", "heterogeneous")
@@ -162,11 +179,11 @@ class SimConfig:
         if self.fused_mode == "cotangent":
             assert self.apply_mode == "fused", \
                 "fused_mode='cotangent' requires apply_mode='fused'"
-            assert self.cotangent_eligible(), (
-                f"configuration is not cotangent-eligible: rule "
+            assert self.cotangent_serviceable(), (
+                f"configuration is not cotangent-serviceable: rule "
                 f"{self.server.rule!r} must declare coeffs_are_v_independent "
-                f"and gating must be whole-copy without a gradient cache "
-                f"(see SimConfig.cotangent_eligible)")
+                f"or v_separable, and gating must be whole-copy without a "
+                f"gradient cache (see SimConfig.cotangent_serviceable)")
         rule = server_rules.get_rule(self.server.rule)
         if rule.synchronous:
             # A synchronous barrier only makes sense with a fair schedule —
@@ -519,8 +536,7 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
                           for i in range(batch.leaf_ts.shape[1])])
         else:
             grad_ts = batch.ts
-        push_arg = (jax.tree.map(lambda m: m & batch.valid, batch.leaf_mask)
-                    if bw.per_tensor_push else batch.valid)
+        push_arg = qlib.drained_push_arg(batch, bw.per_tensor_push)
         cp = batch.payload.get("copy") if rule.needs_client_params else None
 
         if use_cotangent:
@@ -586,6 +602,17 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
             rejected=n_rejected, dropped=n_dropped, drained=k_eff,
             depth_post=queue.size, depth_peak=depth_peak,
             latency_sum=latency_sum, latency_wall_sum=latency_wall_sum)
+        # kernel-path telemetry: the drained window feeds the one-kernel
+        # apply directly (one launch per leaf consumes k_eff real events);
+        # the serial drain launches the per-event Pallas op capacity times.
+        n_leaves = len(jax.tree.leaves(state.server.params))
+        if (config.apply_mode == "fused" and not use_cotangent
+                and engine.fused_kernel_active(scfg)):
+            counters = engine.count_kernel(counters, n_leaves, k_eff)
+        elif (config.apply_mode == "serial"
+              and engine.serial_kernel_active(scfg, bw.per_tensor_fetch)):
+            counters = engine.count_kernel(
+                counters, batch.valid.shape[0] * n_leaves, k_eff)
         if scn is not None:
             counters = scen.count_scenario(
                 counters, now=scn_state.now,
@@ -780,6 +807,10 @@ def build_step_fn(
             state.counters, push_event, fetch,
             push_bytes_sent=push_sent, push_bytes_total=push_total,
             fetch_bytes_sent=fetch_sent, fetch_bytes_total=fetch_total)
+        if engine.serial_kernel_active(scfg, bw.per_tensor_fetch):
+            # each event stages one per-leaf launch of the rule's Pallas op
+            counters = engine.count_kernel(
+                counters, len(jax.tree.leaves(state.server.params)), 1)
 
         new_state = SimState(
             server=new_server,
@@ -991,6 +1022,10 @@ def build_step_fn(
             state.counters, push_event, fetch,
             push_bytes_sent=push_sent, push_bytes_total=push_total,
             fetch_bytes_sent=fetch_sent, fetch_bytes_total=K * model_bytes)
+        if not use_cotangent and engine.fused_kernel_active(scfg):
+            # one fused window = one launch per leaf consuming all K events
+            counters = engine.count_kernel(
+                counters, len(jax.tree.leaves(state.server.params)), K)
         if scn is not None:
             counters = scen.count_scenario(
                 counters, now=scn_state.now,
@@ -1108,6 +1143,10 @@ def run_simulation(
         # same stability contract for the wall-clock/scenario telemetry
         counters = {k: v for k, v in counters.items()
                     if k != "wall_clock" and not k.startswith("scenario_")}
+    if not config.server.use_fused_kernel:
+        # kernel-path telemetry only appears when the kernel path can run
+        counters = {k: v for k, v in counters.items()
+                    if not k.startswith("kernel_")}
     out = {
         "state": state,
         "steps": curve_steps,

@@ -319,9 +319,11 @@ def test_fused_auto_mode_selection(setup):
 
 
 def test_cotangent_rejects_ineligible_configs(setup):
-    # v-dependent rule
+    # v-dependent, non-separable rule (gap-aware scale needs the stale
+    # copies the cotangent path never materializes; fasgd itself is now
+    # v_separable and rides the cotangent path on explicit request)
     with pytest.raises(AssertionError, match="cotangent"):
-        dataclasses.replace(_cfg("fasgd"), apply_mode="fused",
+        dataclasses.replace(_cfg("gap"), apply_mode="fused",
                             fused_mode="cotangent")
     # gradient cache stores per-event gradients the cotangent path never
     # materializes
@@ -337,7 +339,7 @@ def test_cotangent_rejects_ineligible_configs(setup):
             apply_mode="fused", fused_mode="cotangent")
     # engine-level guards
     params = {"w": jnp.ones((4, 3))}
-    scfg = ServerConfig(rule="fasgd")
+    scfg = ServerConfig(rule="gap")
     server = server_rules.init(scfg, params)
     with pytest.raises(ValueError, match="cotangent"):
         engine.fused_apply_cotangent(

@@ -1,0 +1,265 @@
+"""One-kernel event loop (kernels/fused_event_apply.py) vs the split path.
+
+The contract under test (ISSUE: one Pallas launch per leaf per drained
+window):
+
+* the kernel body (interpret=True) and the streaming XLA oracle agree with
+  each other and with the generic per-leaf fused apply, for both weight
+  modes ('coeff' prefolded scalars, 'fasgd' in-kernel eq. 7 scales);
+* a FRED simulation with ``use_fused_kernel=True`` is allclose to the
+  generic fused path for every ``batched_pallas_mode`` rule, across
+  per-tensor gating, event dedup, and all ingress-queue drain policies;
+* fasgd's explicit cotangent path (v_separable ε-reparameterization via
+  the `reweight_by_v` pullback) is allclose to the materialized reduction;
+* kernel-path telemetry (`kernel_launches` / `kernel_events`) appears in
+  the counters exactly when the kernel path is on — kernel-off runs keep
+  the pre-kernel counter dict, so the replay goldens stay bitwise valid.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core import rules as server_rules
+from repro.core.bandwidth import BandwidthConfig
+from repro.core.rules import ServerConfig
+from repro.kernels.fused_event_apply import LANES, fused_event_apply_2d
+from repro.kernels.ops import default_block_rows, fused_event_apply
+from repro.kernels.ref import fused_event_apply_ref
+from repro.sim.fred import SimConfig, run_simulation
+
+from conftest import tree_allclose, tree_equal
+
+KERNEL_RULES = tuple(
+    r for r in server_rules.registered_rules()
+    if server_rules.get_rule(r).batched_pallas_mode is not None)
+
+
+def _mk_batch(K, rows, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 9)
+    p = jax.random.normal(ks[0], (rows, LANES), jnp.float32)
+    g = 0.1 * jax.random.normal(ks[1], (K, rows, LANES), jnp.float32)
+    n = jnp.abs(0.01 * jax.random.normal(ks[2], (rows, LANES)))
+    b = 0.05 * jax.random.normal(ks[3], (rows, LANES))
+    v = 1.0 + 0.1 * jax.random.normal(ks[4], (rows, LANES))
+    w = jnp.abs(jax.random.normal(ks[5], (K,)))
+    wm = jax.nn.softmax(jax.random.normal(ks[6], (K,)))
+    taus = jax.random.randint(ks[7], (K,), 1, 6).astype(jnp.float32)
+    return p, g, n, b, v, w, wm, taus
+
+
+@pytest.mark.parametrize("mode", ["fasgd", "coeff"])
+@pytest.mark.parametrize("block_rows", [8, 64])
+@pytest.mark.parametrize("has_push", [1.0, 0.0])
+def test_kernel_2d_matches_ref(mode, block_rows, has_push):
+    """Interpreted kernel body == streaming oracle, both modes, push held."""
+    K, rows = 5, 64
+    p, g, n, b, v, w, wm, taus = _mk_batch(K, rows)
+    out_k = fused_event_apply_2d(
+        p, g, n, b, v, w, wm, taus, 0.01, has_push, mode=mode,
+        block_rows=block_rows, interpret=True)
+    out_r = fused_event_apply_ref(
+        p, g, n, b, v, w, wm, taus, 0.01, has_push, mode=mode)
+    for a, r in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=1e-5, atol=1e-6)
+    if has_push == 0.0:   # stats must be held bit-exactly when nothing pushed
+        for a, s in zip(out_k[1:], (n, b, v)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(s))
+
+
+@pytest.mark.parametrize("track_stats", [True, False])
+def test_kernel_2d_track_stats_toggle(track_stats):
+    """track_stats=False passes n/b/v through and still applies the delta."""
+    K, rows = 3, 32
+    p, g, n, b, v, w, wm, taus = _mk_batch(K, rows, seed=2)
+    po, no, bo, vo = fused_event_apply_2d(
+        p, g, n, b, v, w, wm, taus, 0.01, 1.0, mode="coeff",
+        track_stats=track_stats, block_rows=8, interpret=True)
+    if not track_stats:
+        np.testing.assert_array_equal(np.asarray(no), np.asarray(n))
+        np.testing.assert_array_equal(np.asarray(vo), np.asarray(v))
+    assert not np.allclose(np.asarray(po), np.asarray(p))
+
+
+@pytest.mark.parametrize("shape", [(7,), (130,), (3, 5, 7), (256, 128)])
+def test_ops_wrapper_ragged_shapes(shape):
+    """ops.fused_event_apply pads leaves to (R, 128) tiles; the interpret
+    and streaming-XLA dispatch paths agree with the oracle."""
+    K = 4
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    p = jax.random.normal(ks[0], shape)
+    g = 0.1 * jax.random.normal(ks[1], (K,) + shape)
+    n = jnp.abs(0.01 * jax.random.normal(ks[2], shape))
+    b = jnp.zeros(shape)
+    v = 1.0 + 0.1 * jnp.abs(jax.random.normal(ks[3], shape))
+    w = jnp.array([0.5, 0.0, 1.0, 0.25])
+    wm = jnp.array([0.25] * K)
+    taus = jnp.array([1.0, 2.0, 3.0, 4.0])
+    tree = lambda x: {"a": x, "b": x * 2.0}
+    ref = fused_event_apply_ref(p, g, n, b, v, w, wm, taus, 0.01, 1.0)
+    for interp in (True, None):   # None → CPU auto → streaming XLA path
+        out = fused_event_apply(
+            tree(p), tree(g), tree(n), tree(b), tree(v), tree(w), tree(wm),
+            tree(taus), tree(jnp.asarray(1.0)), lr=0.01, interpret=interp)
+        for o, r in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(o["a"]), np.asarray(r),
+                                       rtol=1e-5, atol=1e-6)
+        assert out[0]["a"].shape == shape
+
+
+def test_default_block_rows_table():
+    """Tile height shrinks as the event batch (VMEM gradient slab) grows."""
+    assert default_block_rows(1) >= default_block_rows(64) \
+        >= default_block_rows(1024) >= 8
+
+
+def _cfg(rule, **kw):
+    return SimConfig(
+        num_clients=kw.pop("num_clients", 4), batch_size=8,
+        seed=kw.pop("seed", 3),
+        server=ServerConfig(rule=rule, lr=0.01, num_clients=4,
+                            **kw.pop("server_kwargs", {})),
+        **kw)
+
+
+def _run(cfg, setup, steps=48):
+    params, ds, loss = setup
+    return run_simulation(
+        cfg, loss, params, ds.x_train, ds.y_train, steps, eval_every=steps,
+        eval_fn=lambda p: loss(p, ds.x_valid, ds.y_valid))
+
+
+@pytest.fixture(scope="module")
+def setup(mlp_setup):
+    return mlp_setup
+
+
+def _strip_kernel(counters):
+    return {k: v for k, v in counters.items() if not k.startswith("kernel_")}
+
+
+@pytest.mark.parametrize("rule", KERNEL_RULES)
+def test_one_kernel_sim_matches_generic(setup, rule):
+    """Kernel-on fused run == kernel-off fused run, for every kernelizable
+    rule, with eq.-9 gating on both directions.  The first windows start
+    all-clients-at-ts-0, so event dedup grouping is exercised too."""
+    base = dataclasses.replace(
+        _cfg(rule, seed=7,
+             bandwidth=BandwidthConfig(c_push=2.0, c_fetch=2.0)),
+        events_per_step=8, apply_mode="fused", fused_mode="materialized")
+    off = _run(base, setup, steps=64)
+    on = _run(dataclasses.replace(
+        base, server=dataclasses.replace(base.server,
+                                         use_fused_kernel=True)),
+        setup, steps=64)
+    assert tree_allclose(off["state"].server.params,
+                         on["state"].server.params, rtol=1e-4, atol=1e-6)
+    assert tree_allclose(off["state"].server.v, on["state"].server.v,
+                         rtol=1e-4, atol=1e-6)
+    assert off["final_timestamp"] == on["final_timestamp"]
+    assert off["counters"] == _strip_kernel(on["counters"])
+
+
+def test_one_kernel_interpret_matches_generic(setup):
+    """The actual Pallas kernel body (interpret=True) inside a short fused
+    simulation — not just the streaming-XLA stand-in."""
+    base = dataclasses.replace(_cfg("fasgd", seed=5), events_per_step=4,
+                               apply_mode="fused")
+    off = _run(base, setup, steps=16)
+    on = _run(dataclasses.replace(
+        base, server=dataclasses.replace(
+            base.server, use_fused_kernel=True, kernel_interpret=True,
+            kernel_block_rows=8)),
+        setup, steps=16)
+    assert tree_allclose(off["state"].server.params,
+                         on["state"].server.params, rtol=1e-4, atol=1e-6)
+
+
+def test_one_kernel_per_tensor_gating(setup):
+    """Per-leaf push masks and per-leaf staleness ride the kernel's SMEM
+    weight vectors (one launch per leaf, leaf-specific w/τ)."""
+    base = dataclasses.replace(
+        _cfg("fasgd", seed=9,
+             bandwidth=BandwidthConfig(c_push=2.0, c_fetch=2.0,
+                                       per_tensor_push=True,
+                                       per_tensor_fetch=True)),
+        events_per_step=8, apply_mode="fused")
+    off = _run(base, setup, steps=48)
+    on = _run(dataclasses.replace(
+        base, server=dataclasses.replace(base.server,
+                                         use_fused_kernel=True)),
+        setup, steps=48)
+    assert tree_allclose(off["state"].server.params,
+                         on["state"].server.params, rtol=1e-4, atol=1e-6)
+    assert off["counters"] == _strip_kernel(on["counters"])
+
+
+@pytest.mark.parametrize("drain_policy", ["drain_all", "drain_k", "adaptive"])
+def test_one_kernel_queue_drain(setup, drain_policy):
+    """Every drained window feeds the kernel in one launch per leaf, for
+    each drain policy; trajectory matches the kernel-off queue run."""
+    base = dataclasses.replace(
+        _cfg("fasgd", seed=11), events_per_step=4, apply_mode="fused",
+        queue_capacity=8, admission_policy="reject",
+        drain_policy=drain_policy, drain_k=2)
+    off = _run(base, setup, steps=48)
+    on = _run(dataclasses.replace(
+        base, server=dataclasses.replace(base.server,
+                                         use_fused_kernel=True)),
+        setup, steps=48)
+    assert tree_allclose(off["state"].server.params,
+                         on["state"].server.params, rtol=1e-4, atol=1e-6)
+    assert off["counters"] == _strip_kernel(on["counters"])
+    assert on["counters"]["kernel_events"] \
+        == on["counters"]["queue_drained"]
+
+
+def test_cotangent_fasgd_matches_materialized(setup):
+    """fasgd's explicit cotangent opt-in (v_separable split through the
+    reweight_by_v pullback) tracks the materialized fused reduction; 'auto'
+    must NOT resolve to it (the split is ε-approximate)."""
+    base = dataclasses.replace(_cfg("fasgd", seed=7), events_per_step=8,
+                               apply_mode="fused")
+    assert base.cotangent_serviceable() and not base.cotangent_eligible()
+    mat = _run(dataclasses.replace(base, fused_mode="materialized"),
+               setup, steps=64)
+    cot = _run(dataclasses.replace(base, fused_mode="cotangent"),
+               setup, steps=64)
+    auto = _run(base, setup, steps=64)
+    assert tree_allclose(mat["state"].server.params,
+                         cot["state"].server.params, rtol=1e-4, atol=1e-6)
+    assert mat["counters"] == cot["counters"]
+    # 'auto' resolves to materialized for v_separable-only rules: bitwise
+    assert tree_equal(mat["state"].server.params,
+                      auto["state"].server.params)
+
+
+def test_kernel_counters_only_when_kernel_on(setup):
+    """kernel_launches/kernel_events appear iff the kernel path is on —
+    kernel-off counter dicts are unchanged, keeping replay goldens bitwise
+    valid."""
+    base = dataclasses.replace(_cfg("fasgd"), events_per_step=4,
+                               apply_mode="fused")
+    off = _run(base, setup, steps=16)
+    assert not any(k.startswith("kernel_") for k in off["counters"])
+    on = _run(dataclasses.replace(
+        base, server=dataclasses.replace(base.server,
+                                         use_fused_kernel=True)),
+        setup, steps=16)
+    n_leaves = len(jax.tree.leaves(on["state"].server.params))
+    assert on["counters"]["kernel_launches"] == 4 * n_leaves  # 4 windows
+    assert on["counters"]["kernel_events"] == 16
+
+
+def test_reweight_by_v_pullback():
+    """The custom vjp carries v through: d/dW of (W·vfac-contraction) is
+    exactly the elementwise vfactor scaling of the cotangent."""
+    vfac = {"w": jnp.array([0.5, 2.0, 4.0])}
+    W = {"w": jnp.array([1.0, 1.0, 1.0])}
+    _, pull = jax.vjp(lambda p: engine.reweight_by_v(p, vfac), W)
+    ct = pull({"w": jnp.array([1.0, 10.0, 100.0])})[0]
+    np.testing.assert_allclose(np.asarray(ct["w"]), [0.5, 20.0, 400.0])
