@@ -182,6 +182,32 @@ SCHEMAS = {
             "kasync_beats_ssgd": "bool",
         },
     },
+    "BENCH_server_sharding.json": {
+        "model_sizes": ("list", "int"),
+        "batch_size": "int",
+        "rule": "str",
+        "lam": "int",
+        "events_per_window": "int",
+        "num_devices": "int",
+        "methodology": "str",
+        "quick": "bool",
+        "rows": ("list", {
+            "shards": "int",
+            "applied_events_per_sec": "number",
+            "compile_s": "number",
+            # static routing-plan peak: max per-shard resident server-state
+            # bytes (blocks + replicated remainder); acceptance (full run):
+            # shrinks ~1/S with shard count
+            "peak_server_bytes": "number",
+            "bytes_vs_replicated": "number",
+            "allclose_vs_replicated": "bool",
+        }),
+        "summary": {
+            "max_shards": "int",
+            "peak_bytes_shrink": "number",
+            "ideal_shrink": "int",
+        },
+    },
     "BENCH_fig3_bandwidth.json": {
         "quick": "bool",
         "steps": "int",

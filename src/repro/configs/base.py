@@ -176,4 +176,12 @@ class TrainerConfig:
     # fleet is a fixed SPMD program (build_round_step raises).
     scenario: Optional[ScenarioConfig] = None
     kasync_k: int = 0                  # kasync partial-barrier K (0 → C)
+    # --- sharded parameter server (core/server_shard.py) ---
+    # 1 = replicated server (default, bitwise-identical to the pre-shard
+    # trainer); S > 1 block-partitions W and the eq. 4–6 statistics across S
+    # devices along the `server_axis` mesh axis — place state with
+    # `round_trainer.shard_round_state` / `run_simulation(mesh=...)`.
+    # See docs/SHARDING.md.
+    server_shards: int = 1
+    server_axis: str = "server"
     seed: int = 0

@@ -135,8 +135,11 @@ class Counters(NamedTuple):
     The `wall_clock` / `scenario_*` fields carry the modeled wall-clock axis
     (`core/scenarios.py`, folded in by `scenarios.count_scenario` /
     `scenarios.advance_wall`) and stay zero when no scenario is configured.
-    Every field is documented with its mode matrix in the "Counters
-    telemetry glossary" of docs/ARCHITECTURE.md.
+    The `shard_*` fields carry the partitioned-server telemetry
+    (`core/server_shard.py`, folded in by `server_shard.count_shard`) and
+    stay zero when `server_shards <= 1`.  Every field is documented with
+    its mode matrix in the "Counters telemetry glossary" of
+    docs/ARCHITECTURE.md.
 
     No jnp defaults here on purpose: NamedTuple defaults are evaluated at
     module import, which would stage device ops before the caller configures
@@ -173,6 +176,12 @@ class Counters(NamedTuple):
     # `use_fused_kernel` is off)
     kernel_launches: jnp.ndarray     # int32 — per-leaf kernel launches
     kernel_events: jnp.ndarray       # int32 — events consumed by those windows
+    # sharded-server telemetry (core/server_shard.py; folded in by
+    # `server_shard.count_shard`, zero when `server_shards <= 1`)
+    shard_applies: jnp.ndarray       # int32 — partitioned apply windows
+    shard_events: jnp.ndarray        # int32 — events those windows consumed
+    shard_bytes_peak: jnp.ndarray    # float32 — max per-shard resident bytes
+    shard_depth_peak: jnp.ndarray    # int32 — max per-window shard batch
 
 
 def init_counters() -> Counters:
@@ -181,7 +190,8 @@ def init_counters() -> Counters:
     zf = jnp.zeros((), jnp.float32)
     return Counters(zero, zero, zero, zero, zf, zf, zf, zf,
                     zero, zero, zero, zero, zf, zero, zf, zero,
-                    zf, zero, zero, zf, zero, zf, zero, zero)
+                    zf, zero, zero, zf, zero, zf, zero, zero,
+                    zero, zero, zf, zero)
 
 
 def _acc_bytes(prev, amount):

@@ -47,6 +47,13 @@ The cotangent fused path is not wired through the round trainer's queue
 FRED does); ``fused_mode='auto'`` falls back to the materialized reduction
 and an explicit ``'cotangent'`` with a queue is rejected.
 
+**Sharded server** (``TrainerConfig.server_shards > 1``,
+`core/server_shard.py`): `shard_round_state` block-partitions the server
+state (and the ingress-queue payload) across a ``'server'`` mesh axis, so
+the canonical update runs with each shard owning its slice of W and the
+eq. 4–6 statistics — the same placement contract as FRED's
+``run_simulation(mesh=...)``; see docs/SHARDING.md.
+
 **Scenario-lite wall clock** (``TrainerConfig.scenario``,
 `core/scenarios.py`): each round the C clients draw modeled service times
 from per-client streams keyed by ``(seed, client, round_idx)``; the server
@@ -69,6 +76,7 @@ from repro.core import engine
 from repro.core import queue as qlib
 from repro.core import rules as server_rules
 from repro.core import scenarios as scen
+from repro.core import server_shard
 from repro.core.bandwidth import masked_bytes, tree_bytes
 from repro.core.engine import Counters
 from repro.core.rules import ServerConfig, ServerState
@@ -134,6 +142,23 @@ def init_round_state(tc: TrainerConfig, params) -> RoundState:
     )
 
 
+def shard_round_state(state: RoundState, mesh,
+                      axis: str = server_shard.SERVER_AXIS) -> RoundState:
+    """Place a `RoundState`'s server partition on a sharded-server mesh.
+
+    Block-partitions ``state.server`` (W and the eq. 4–6 statistics) and the
+    ingress-queue payload across the ``axis`` devices of ``mesh`` via
+    `core.server_shard`; the [C]-leading client copies stay replicated (they
+    are the *fleet*, sharded separately by a client axis).  A mesh whose
+    ``axis`` has size 1 (or no ``axis``) is a no-op, preserving the
+    ``server_shards=1`` bitwise contract.
+    """
+    return state._replace(
+        server=server_shard.shard_server_state(state.server, mesh, axis),
+        queue=server_shard.shard_queue_state(state.queue, mesh, axis),
+    )
+
+
 def build_round_step(
     tc: TrainerConfig,
     grad_fn: Callable,     # grad_fn(params, batch) -> (loss, grads)
@@ -168,6 +193,10 @@ def build_round_step(
 
     rule = server_rules.get_rule(tc.rule)
     use_queue = tc.queue_capacity > 0
+    if tc.server_shards < 1:
+        raise ValueError(
+            f"server_shards must be >= 1 (1 = replicated server), got "
+            f"{tc.server_shards}")
     if tc.queue_capacity < 0:
         raise ValueError(
             f"queue_capacity must be >= 0 (0 disables the queue), got "
@@ -455,6 +484,12 @@ def build_round_step(
             rows = qbatch.valid.shape[0] if use_queue else C
             counters = engine.count_kernel(
                 counters, rows * n_leaves, k_eff if use_queue else C)
+        if tc.server_shards > 1:
+            counters = server_shard.count_shard(
+                counters, applies=1, events=k_eff if use_queue else C,
+                bytes_peak=server_shard.peak_shard_bytes(
+                    state.server, tc.server_shards, tc.server_axis),
+                depth_peak=k_eff if use_queue else C)
         if use_scenario:
             # a sync rule's round ends at its partial barrier (the K-th
             # arrival); an async round is charged the full straggler t_(C)

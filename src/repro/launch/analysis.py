@@ -87,29 +87,36 @@ class Roofline:
 
     @property
     def compute_s(self) -> float:
+        """Compute roofline term: per-device FLOPs / peak FLOP/s (seconds)."""
         return self.flops / PEAK_FLOPS_BF16
 
     @property
     def memory_s(self) -> float:
+        """Memory roofline term: per-device HBM bytes / HBM bandwidth."""
         return self.hbm_bytes / HBM_BW
 
     @property
     def collective_s(self) -> float:
+        """Collective roofline term: per-device collective bytes / link bw."""
         return self.coll_bytes / ICI_BW
 
     @property
     def bottleneck(self) -> str:
+        """The largest roofline term: 'compute' | 'memory' | 'collective'."""
         terms = {"compute": self.compute_s, "memory": self.memory_s,
                  "collective": self.collective_s}
         return max(terms, key=terms.get)
 
     @property
     def useful_flops_frac(self) -> Optional[float]:
+        """Model-FLOPs utilization proxy: analytic 6·N·D / measured HLO
+        FLOPs (per device); None when either quantity is unknown."""
         if self.model_flops and self.flops:
             return (self.model_flops / self.chips) / self.flops
         return None
 
     def to_dict(self) -> dict:
+        """Flat JSON-ready dict: dataclass fields + the derived terms."""
         d = dataclasses.asdict(self)
         d.update(
             compute_s=self.compute_s, memory_s=self.memory_s,
@@ -149,6 +156,9 @@ def analyze(arch: str, shape: str, mesh_name: str, chips: int,
             compiled, model_flops: Optional[float] = None,
             costs: Optional[Tuple[float, float, Dict[str, int]]] = None
             ) -> Roofline:
+    """Build a `Roofline` from a compiled executable: cost_analysis FLOPs /
+    bytes (or pre-extrapolated `costs`), HLO-parsed collective bytes, and
+    memory_analysis per-device peak."""
     if costs is None:
         costs = raw_costs(compiled)
     flops, hbm, coll = costs

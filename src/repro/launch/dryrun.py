@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import/init: jax locks the device count on first use.
-#   This is dry-run-only — tests and benches see the real single CPU device.
-
 """Multi-pod dry-run: prove the distribution config is coherent.
 
 For every (architecture × input shape × mesh) combination this lowers the
@@ -22,6 +17,12 @@ Usage:
 
 Results append to benchmarks/results/dryrun.jsonl (one JSON object per line).
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+#   This is dry-run-only — tests and benches see the real single CPU device.
+#   (jax imports below are function-local for the same reason.)
+
 import argparse
 import json
 import subprocess
@@ -90,6 +91,9 @@ def cost_extrapolation(cfg, shape, mesh, tc):
 def run_one(arch: str, shape_name: str, multi_pod: bool, out_path: str,
             overrides=None, extra_tc=None, tag: str = "baseline",
             extrapolate: bool = True):
+    """Dry-run one (arch × shape × mesh): compile the full-depth program,
+    extrapolate roofline costs from unrolled variants, append a JSON record
+    to `out_path`, and print the memory / cost / roofline summary."""
     import jax
     from repro.configs import get_config
     from repro.configs.base import INPUT_SHAPES, TrainerConfig
@@ -153,6 +157,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_path: str,
 
 
 def run_all(multi_pod: bool, out_path: str, timeout: int = 3000):
+    """Dry-run every `pair_list` entry in a fresh subprocess each (the 512
+    forced host devices must be set before jax init), skipping pairs already
+    recorded ok in `out_path`; exits nonzero on any failure."""
     done = set()
     if os.path.exists(out_path):
         mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -197,6 +204,7 @@ def run_all(multi_pod: bool, out_path: str, timeout: int = 3000):
 
 
 def main():
+    """CLI entry point (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")

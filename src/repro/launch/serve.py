@@ -20,6 +20,8 @@ from repro.sharding import set_mesh_context
 
 
 def main():
+    """CLI entry point: batched prefill then token-by-token decode, printing
+    tok/s for both phases (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")

@@ -38,10 +38,13 @@ from repro.sharding import (
 # ---------------------------------------------------------------------------
 
 def abstract_params(cfg: ModelConfig):
+    """Parameter pytree of ShapeDtypeStructs via eval_shape — no allocation."""
     return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
 
 
 def abstract_server_state(cfg: ModelConfig, tc: TrainerConfig):
+    """Abstract ServerState (W + eq. 4–6 n/b/v stats + scalar T), with the
+    statistics leaves cast to `tc.stats_dtype` when it isn't float32."""
     scfg = server_config(tc)
     params = abstract_params(cfg)
     st = jax.eval_shape(lambda: server_rules.init(scfg, _zeros_of(params)))
@@ -60,6 +63,7 @@ def _zeros_of(abstract_tree):
 
 
 def server_config(tc: TrainerConfig) -> ServerConfig:
+    """Project the trainer config onto the engine's `ServerConfig`."""
     return ServerConfig(
         rule=tc.rule, lr=tc.lr, gamma=tc.gamma, beta=tc.beta, eps=tc.eps,
         kappa=tc.kappa, poly_power=tc.poly_power,
@@ -152,6 +156,7 @@ def make_train_step(cfg: ModelConfig, tc: TrainerConfig):
 
 
 def make_prefill_step(cfg: ModelConfig):
+    """(params, batch) → (logits, cache) — or logits alone for encoders."""
     if cfg.is_encoder:
         def encode_step(params, batch):
             logits, _ = forward(params, cfg, batch)
@@ -165,6 +170,7 @@ def make_prefill_step(cfg: ModelConfig):
 
 
 def make_decode_step(cfg: ModelConfig):
+    """(params, token [B,1], cache, pos) → (logits, cache) single-token step."""
     def serve_step(params, token, cache, pos):
         return decode_step(params, cfg, token, cache, pos)
     return serve_step

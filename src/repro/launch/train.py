@@ -23,9 +23,11 @@ from repro.configs import get_config, get_smoke_config
 from repro.configs.base import TrainerConfig
 from repro.core import rules as server_rules
 from repro.core import scenarios
-from repro.core.round_trainer import build_round_step, init_round_state
+from repro.core import server_shard
+from repro.core.round_trainer import (
+    build_round_step, init_round_state, shard_round_state)
 from repro.data.tokens import TokenDataConfig, make_batch as make_token_batch
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_server_mesh
 from repro.launch.steps import make_train_step, server_config
 from repro.models.api import make_batch, param_count
 from repro.models.transformer import init_model, loss_fn
@@ -43,6 +45,8 @@ def batch_for_step(cfg, B, S, step):
 
 
 def main():
+    """CLI entry point: round-based (--clients C > 0) or pod-sync FASGD
+    training on the assigned arch (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
@@ -93,6 +97,12 @@ def main():
     ap.add_argument("--kernel-block-rows", type=int, default=0,
                     help="tile height for the one-kernel apply "
                          "(0 = K-dependent tuning table)")
+    ap.add_argument("--server-shards", type=int, default=1,
+                    help="partition the server state (W + eq. 4-6 stats) "
+                         "across S devices along a 'server' mesh axis "
+                         "(core/server_shard.py, docs/SHARDING.md); 1 = "
+                         "replicated server; on CPU force S devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=S")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -104,6 +114,8 @@ def main():
            else scenarios.preset(args.scenario))
     if scn is not None and args.clients <= 0:
         ap.error("--scenario needs the round trainer (--clients C > 0)")
+    if args.server_shards > 1 and args.clients <= 0:
+        ap.error("--server-shards needs the round trainer (--clients C > 0)")
     kasync_k = args.kasync_k
     if args.rule == "kasync" and kasync_k == 0:
         # a full-barrier default would make kasync ≡ ssgd; half the fleet
@@ -116,6 +128,7 @@ def main():
         queue_capacity=args.queue_capacity, drain_policy=args.drain_policy,
         drain_k=args.drain_k, admission_policy=args.admission_policy,
         scenario=scn, kasync_k=kasync_k,
+        server_shards=args.server_shards,
         use_fused_kernel=args.use_fused_kernel,
         kernel_interpret=(None if args.kernel_interpret == "auto"
                           else args.kernel_interpret == "on"),
@@ -135,6 +148,13 @@ def main():
 
     if args.clients > 0:
         state = init_round_state(tc, params)
+        if tc.server_shards > 1:
+            smesh = make_server_mesh(server=tc.server_shards)
+            server_shard.validate_server_mesh(
+                smesh, tc.server_shards, tc.server_axis)
+            state = shard_round_state(state, smesh, tc.server_axis)
+            print(f"[train] server sharded: {tc.server_shards} shards on "
+                  f"axis '{tc.server_axis}' (mesh {dict(smesh.shape)})")
         step_fn = jax.jit(build_round_step(tc, grad_fn, apply_mode=args.apply_mode))
         C = args.clients
         assert args.batch % C == 0, "global batch must divide clients"
@@ -191,6 +211,13 @@ def main():
                   f"({windows} apply windows x {n_leaves} leaves), "
                   f"{events} events consumed "
                   f"({events / max(windows, 1):.1f} events/window)")
+        if tc.server_shards > 1:
+            print(f"[train] shards: {tc.server_shards} server shards, "
+                  f"{int(cnt.shard_events)} events over "
+                  f"{int(cnt.shard_applies)} apply windows "
+                  f"(peak window batch {int(cnt.shard_depth_peak)}), "
+                  f"peak resident "
+                  f"{float(cnt.shard_bytes_peak) / 2**20:.2f} MiB/shard")
         if scn is not None:
             rounds = max(int(cnt.scenario_windows), 1)
             k_used = (tc.kasync_k or C) if server_rules.get_rule(

@@ -1,3 +1,7 @@
+"""Named-axis sharding: the generic FSDP parameter rule (`leaf_param_spec`),
+batch/cache specs, and activation constraints (DESIGN.md §5).  The server-
+partition layer (`core.server_shard`) builds on the same path+shape routing
+idea along a dedicated ``'server'`` axis — see docs/SHARDING.md."""
 from repro.sharding.rules import (
     axis_size,
     batch_axes,

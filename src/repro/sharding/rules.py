@@ -41,15 +41,19 @@ _ctx = threading.local()
 
 
 def set_mesh_context(mesh: Optional[Mesh]):
+    """Install `mesh` (thread-locally) as the target of `constrain` calls;
+    None uninstalls, making every activation constraint a no-op."""
     _ctx.mesh = mesh
 
 
 def get_mesh_context() -> Optional[Mesh]:
+    """The thread-local mesh `constrain` targets, or None outside a context."""
     return getattr(_ctx, "mesh", None)
 
 
 @contextlib.contextmanager
 def mesh_context(mesh: Mesh):
+    """Scoped `set_mesh_context`: restores the previous mesh on exit."""
     prev = get_mesh_context()
     set_mesh_context(mesh)
     try:
@@ -71,6 +75,7 @@ def set_attn_shard_mode(mode: Optional[str]):
 
 
 def attn_shard_mode() -> str:
+    """Active attention-constraint mode: explicit set, env, else 'qchunk'."""
     return _modes["attn"] or os.environ.get("REPRO_ATTN_SHARD", "qchunk")
 
 
@@ -81,6 +86,7 @@ def set_mla_cache_mode(mode: Optional[str]):
 
 
 def mla_cache_mode() -> str:
+    """Active MLA-cache mode: explicit set, env REPRO_MLA_CACHE, else 'rank'."""
     return _modes["mla_cache"] or os.environ.get("REPRO_MLA_CACHE", "rank")
 
 
@@ -167,6 +173,7 @@ def param_specs(params, mesh: Mesh):
 
 
 def param_shardings(params, mesh: Mesh):
+    """`param_specs` materialized as a pytree of NamedShardings on `mesh`."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
 
 
@@ -211,6 +218,8 @@ def batch_spec(shape: Sequence[int], mesh: Mesh, *, seq_dim: Optional[int] = Non
 
 
 def batch_shardings(batch, mesh: Mesh, *, seq_dim: Optional[int] = 1):
+    """NamedShardings for a batch pytree (leaves [B, S, ...]): dim 0 over the
+    batch axes via `batch_spec`, with the seq-dim fallback for batch=1."""
     def one(leaf):
         sd = seq_dim if (leaf.ndim > (seq_dim or 0)) else None
         return NamedSharding(mesh, batch_spec(leaf.shape, mesh, seq_dim=sd))
@@ -267,6 +276,7 @@ def cache_specs(cache, mesh: Mesh):
 
 
 def cache_shardings(cache, mesh: Mesh):
+    """`cache_specs` materialized as a pytree of NamedShardings on `mesh`."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs(cache, mesh))
 
 

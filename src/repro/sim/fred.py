@@ -69,6 +69,16 @@ post-drain server.  With ``queue_capacity=1`` and ``drain_policy='drain_all'``
 this reduces bitwise to the immediate-apply path.  See
 ``SimConfig.queue_capacity`` / ``drain_policy`` / ``admission_policy`` and
 docs/ARCHITECTURE.md §"Server ingress queue".
+
+**Sharded parameter server** (``SimConfig.server_shards > 1``,
+`core/server_shard.py`): pass ``run_simulation(mesh=...)`` a mesh carrying
+a ``server_axis`` ('server' by default) of exactly S devices and the server
+state itself — W, the eq. 4–6 statistics n/b/v, and the ingress-queue
+payload — is block-partitioned across those devices, so each shard owns its
+slice of the statistics and of every apply.  With S=1 the placement is a
+no-op (bitwise-identical trajectories); the partition math, the
+replicated≡sharded equivalence invariant, and the multi-process
+(`jax.distributed`) launch recipe live in docs/SHARDING.md.
 """
 from __future__ import annotations
 
@@ -83,6 +93,7 @@ from repro.core import engine
 from repro.core import queue as qlib
 from repro.core import rules as server_rules
 from repro.core import scenarios as scen
+from repro.core import server_shard
 from repro.core.bandwidth import BandwidthConfig, masked_bytes, tree_bytes
 from repro.core.engine import (
     Counters,
@@ -134,6 +145,13 @@ class SimConfig:
     # service-time race (stragglers / hotspots / churn / elastic resize) and
     # gives every run a modeled wall-clock axis (docs/SCENARIOS.md).
     scenario: Optional[scen.ScenarioConfig] = None
+    # --- sharded parameter server (core/server_shard.py; docs/SHARDING.md) ---
+    # 1 = replicated server (default, bitwise-identical to every prior
+    # trajectory).  S > 1 block-partitions W/n/b/v (and the queue payload)
+    # across the `server_axis` of the mesh passed to run_simulation; that
+    # mesh axis must have exactly S devices (validate_server_mesh).
+    server_shards: int = 1
+    server_axis: str = "server"
 
     def cotangent_serviceable(self) -> bool:
         """True iff `fused_apply_cotangent` can serve this configuration.
@@ -202,6 +220,11 @@ class SimConfig:
         if self.apply_mode == "fused":
             assert rule.supports_fused, \
                 f"rule {self.server.rule!r} does not support apply_mode='fused'"
+        # --- sharded-server validation (core/server_shard.py) ---
+        if self.server_shards < 1:
+            raise ValueError(
+                f"server_shards must be >= 1 (1 = replicated server), got "
+                f"{self.server_shards}")
         # --- ingress-queue validation (clear errors, not silent misbehavior) ---
         if self.queue_capacity < 0:
             raise ValueError(
@@ -613,6 +636,15 @@ def _build_queue_step(config: SimConfig, loss_fn, data_x, data_y, K,
               and engine.serial_kernel_active(scfg, bw.per_tensor_fetch)):
             counters = engine.count_kernel(
                 counters, batch.valid.shape[0] * n_leaves, k_eff)
+        if config.server_shards > 1:
+            # one drain window = one apply against the partitioned server;
+            # every shard consumes the same k_eff-event drained batch (its
+            # own blocks of it), so the per-shard depth is k_eff
+            counters = server_shard.count_shard(
+                counters, applies=1, events=k_eff,
+                bytes_peak=server_shard.peak_shard_bytes(
+                    state.server, config.server_shards, config.server_axis),
+                depth_peak=k_eff)
         if scn is not None:
             counters = scen.count_scenario(
                 counters, now=scn_state.now,
@@ -690,8 +722,16 @@ def build_step_fn(
             f"per step, got a {K}-event window: num_steps and eval_every "
             f"must be multiples of num_clients")
 
+    # A mesh only drives the shard_map'd gradient batch when it actually
+    # carries the client axis; a server-only mesh (server sharding,
+    # core/server_shard.py) flows through jit's partitioner instead and
+    # composes with every path below, the ingress queue included.
+    client_mesh = (mesh if mesh is not None
+                   and client_axis in getattr(mesh, "axis_names", ())
+                   and int(mesh.shape[client_axis]) > 1 else None)
+
     if config.queue_capacity:
-        if mesh is not None:
+        if client_mesh is not None:
             raise ValueError(
                 "queue_capacity > 0 does not support a client-axis mesh: "
                 "the ring buffer is replicated server state and the "
@@ -811,6 +851,14 @@ def build_step_fn(
             # each event stages one per-leaf launch of the rule's Pallas op
             counters = engine.count_kernel(
                 counters, len(jax.tree.leaves(state.server.params)), 1)
+        if config.server_shards > 1:
+            # serial lock order: every event is its own one-event apply
+            # window against the partitioned server
+            counters = server_shard.count_shard(
+                counters, applies=1, events=1,
+                bytes_peak=server_shard.peak_shard_bytes(
+                    state.server, config.server_shards, config.server_axis),
+                depth_peak=1)
 
         new_state = SimState(
             server=new_server,
@@ -866,7 +914,7 @@ def build_step_fn(
     use_cotangent = (config.fused_mode == "cotangent"
                      or (config.fused_mode == "auto"
                          and config.cotangent_eligible()))
-    if use_cotangent and mesh is not None:
+    if use_cotangent and client_mesh is not None:
         if config.fused_mode == "cotangent":
             raise ValueError(
                 "fused_mode='cotangent' does not support a client-axis mesh "
@@ -876,12 +924,12 @@ def build_step_fn(
         engine.resolve_event_batched_loss(loss_fn, batched_loss_fn)
         if use_cotangent else None)
     vgrad = jax.vmap(grad_fn)
-    if mesh is not None:
+    if client_mesh is not None:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec
         spec = PartitionSpec(client_axis)
         vgrad = shard_map(
-            jax.vmap(grad_fn), mesh=mesh,
+            jax.vmap(grad_fn), mesh=client_mesh,
             in_specs=(spec, spec, spec), out_specs=(spec, spec),
             check_rep=False)
 
@@ -1026,6 +1074,14 @@ def build_step_fn(
             # one fused window = one launch per leaf consuming all K events
             counters = engine.count_kernel(
                 counters, len(jax.tree.leaves(state.server.params)), K)
+        if config.server_shards > 1:
+            # one fused window = one apply against the partitioned server,
+            # every shard consuming its blocks of all K events
+            counters = server_shard.count_shard(
+                counters, applies=1, events=K,
+                bytes_peak=server_shard.peak_shard_bytes(
+                    state.server, config.server_shards, config.server_axis),
+                depth_peak=K)
         if scn is not None:
             counters = scen.count_scenario(
                 counters, now=scn_state.now,
@@ -1067,8 +1123,8 @@ def run_simulation(
     eval_every: int = 500,
     eval_fn: Optional[Callable] = None,   # eval_fn(server_params) -> scalar cost
     collect_step_metrics: bool = False,
-    mesh=None,                            # optional client-axis shard_map mesh
-    client_axis: str = "clients",
+    mesh=None,                            # optional mesh: client-axis
+    client_axis: str = "clients",         # shard_map and/or server partition
     batched_loss_fn=None,                 # cotangent-path event-batched loss
 ):
     """Run the deterministic simulation; returns a results dict.
@@ -1078,10 +1134,27 @@ def run_simulation(
     final batch covers any remainder.  Validation cost is measured on the
     *server* parameters every `eval_every` events, exactly like the paper's
     figures.
+
+    `mesh` may carry a `client_axis` (the [λ, ...] fleet arrays shard and
+    the fused gradient batch shard_maps over it), a
+    ``config.server_axis`` (the server state block-partitions over it when
+    ``config.server_shards > 1``, `core/server_shard.py`), or both.  A
+    `jax.distributed` multi-process mesh works the same way: every process
+    calls `run_simulation` with the same global mesh — simulate one with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (recipe in
+    docs/SHARDING.md).
     """
     state = init_sim(config, init_params)
-    if mesh is not None:
+    if mesh is not None and client_axis in getattr(mesh, "axis_names", ()):
         state = shard_fleet(state, mesh, client_axis)
+    if config.server_shards > 1:
+        server_shard.validate_server_mesh(
+            mesh, config.server_shards, config.server_axis)
+        state = state._replace(
+            server=server_shard.shard_server_state(
+                state.server, mesh, config.server_axis),
+            queue=server_shard.shard_queue_state(
+                state.queue, mesh, config.server_axis))
     K = config.events_per_step
     base = jax.random.PRNGKey(config.seed)
 
@@ -1147,6 +1220,10 @@ def run_simulation(
         # kernel-path telemetry only appears when the kernel path can run
         counters = {k: v for k, v in counters.items()
                     if not k.startswith("kernel_")}
+    if config.server_shards <= 1:
+        # partitioned-server telemetry only appears when the server shards
+        counters = {k: v for k, v in counters.items()
+                    if not k.startswith("shard_")}
     out = {
         "state": state,
         "steps": curve_steps,
