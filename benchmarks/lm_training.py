@@ -1,0 +1,207 @@
+"""Async LM training: the staleness protocol on a smoke-scale transformer.
+
+The paper's figures 1/3 live on the 784-200-10 MLP; this benchmark reruns
+the same two questions on the transformer zoo's smallest config
+(tinyllama smoke: 2 layers, d=256, vocab 512) over the synthetic
+markov-chain token task, through the full engine path — `models/lm.py`'s
+event-batched loss, FRED, and the real transformer pytree:
+
+  · staleness-vs-cost (fig1-style): error curves for asgd vs fasgd at
+    λ ∈ {4, 16} clients, each rule at its best lr from a small pool.  The
+    acceptance gate: fasgd's elementwise α/(v·τ) scale (eq. 7) must beat
+    plain asgd on final LM loss at the high-staleness operating point.
+  · bandwidth (fig3-style): B-FASGD gating (whole-copy and per-tensor) on
+    the transformer pytree — byte ratios vs final-cost impact.
+  · engine parity: serial vs fused-cotangent on identical configs — the
+    cotangent path (shared/delta GEMM split through attention/MLP) must
+    track the materialized reduction while batching K events per step.
+
+fasgd's useful α range here is ~10× below asgd's: its per-coordinate
+α/(v·τ+ε) normalization makes the raw α a step *size*, not a step scale
+(same reason the paper tunes each rule from its own pool).
+
+Writes ``benchmarks/results/lm_training.json`` and
+``BENCH_lm_training.json`` at the repo root (schema-checked in CI):
+
+    PYTHONPATH=src python -m benchmarks.lm_training --quick   # CI smoke
+    PYTHONPATH=src python -m benchmarks.lm_training           # full sweep
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import auc, save_bench
+from repro.configs import get_smoke_config
+from repro.core.bandwidth import BandwidthConfig
+from repro.core.rules import ServerConfig, get_rule
+from repro.data.tokens import TokenDataConfig, make_batch
+from repro.models.lm import make_eval_fn, make_lm_loss
+from repro.models.transformer import init_model
+from repro.sim.fred import SimConfig, run_simulation
+
+ARCH = "tinyllama-1.1b"
+SEQ_LEN = 32
+TEMPERATURE = 0.2     # sharpens the markov chain so there is signal to learn
+POOL = 8192           # train sequences (large enough not to memorize)
+EVAL_BATCH = 256      # held-out sequences (fold 9999)
+MU = 32               # per-event minibatch (sequences)
+
+# per-rule lr pools (paper §4.1 protocol: each rule tunes its own lr).
+LR_POOLS = {"asgd": (0.1, 0.3), "fasgd": (0.01, 0.03)}
+LAMBDAS = (4, 16)
+
+_cache = {}
+
+
+def _task(seed=0):
+    """(loss_fn, init_params, train pool, eval_fn) — built once."""
+    if "task" not in _cache:
+        cfg = get_smoke_config(ARCH)
+        tcfg = TokenDataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ_LEN,
+                               batch_size=POOL, temperature=TEMPERATURE,
+                               seed=seed)
+        tok, tgt = make_batch(tcfg, 0)
+        vcfg = TokenDataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ_LEN,
+                               batch_size=EVAL_BATCH, temperature=TEMPERATURE,
+                               seed=seed)
+        vt, vg = make_batch(vcfg, 9999)
+        loss = make_lm_loss(cfg)
+        params = init_model(jax.random.PRNGKey(seed), cfg)
+        _cache["task"] = (loss, params, tok, tgt, make_eval_fn(cfg, vt, vg))
+    return _cache["task"]
+
+
+def lm_experiment(*, rule, lam, steps, lr, c_push=0.0, c_fetch=0.0,
+                  per_tensor=False, events_per_step=1, apply_mode="serial",
+                  fused_mode="auto", seed=0):
+    """One FRED run of the smoke transformer on the token task → row dict."""
+    loss, params, tok, tgt, eval_fn = _task(seed)
+    cfg = SimConfig(
+        num_clients=lam, batch_size=MU,
+        server=ServerConfig(
+            rule=rule, lr=lr,
+            num_clients=lam if get_rule(rule).synchronous else 1),
+        bandwidth=BandwidthConfig(c_push=c_push, c_fetch=c_fetch,
+                                  drop_policy="cache",
+                                  per_tensor_push=per_tensor,
+                                  per_tensor_fetch=per_tensor),
+        seed=seed, events_per_step=events_per_step, apply_mode=apply_mode,
+        fused_mode=fused_mode)
+    t0 = time.time()
+    out = run_simulation(cfg, loss, params, tok, tgt, steps,
+                         eval_every=max(steps // 8, 1), eval_fn=eval_fn)
+    wall = time.time() - t0
+    cnt = out["counters"]
+    return {
+        "rule": rule, "lam": lam, "lr": lr, "steps": steps,
+        "c_push": c_push, "c_fetch": c_fetch, "per_tensor": per_tensor,
+        "events_per_step": events_per_step, "apply_mode": apply_mode,
+        "fused_mode": fused_mode,
+        "curve_steps": out["steps"], "val_cost": out["val_cost"],
+        "final_cost": out["val_cost"][-1], "best_cost": min(out["val_cost"]),
+        "auc": auc(out["val_cost"]),
+        "bytes_sent": (cnt["push_bytes_sent"] + cnt["fetch_bytes_sent"]),
+        "bytes_total": (cnt["push_bytes_total"] + cnt["fetch_bytes_total"]),
+        "wall_s": round(wall, 2),
+        "events_per_sec_e2e": round(steps * events_per_step / max(wall, 1e-9), 1),
+    }
+
+
+def run(steps, quick=False):
+    """The three sweeps → (staleness_rows, bandwidth_rows, engine_rows)."""
+    lambdas = (16,) if quick else LAMBDAS
+    pools = ({r: p[-1:] for r, p in LR_POOLS.items()} if quick else LR_POOLS)
+
+    staleness = []
+    for rule in ("asgd", "fasgd"):
+        for lam in lambdas:
+            for lr in pools[rule]:
+                r = lm_experiment(rule=rule, lam=lam, steps=steps, lr=lr)
+                staleness.append(r)
+                print(f"  lm staleness {rule:6s} lam={lam:3d} lr={lr:<5} "
+                      f"final={r['final_cost']:.4f} best={r['best_cost']:.4f} "
+                      f"({r['wall_s']}s)")
+
+    # bandwidth: gate fasgd at the high-staleness point, whole-copy vs
+    # per-tensor, against the ungated fasgd row above as baseline.
+    lam = lambdas[-1]
+    blr = best_at(staleness, "fasgd", lam)["lr"]
+    bandwidth = []
+    grid = [(0.02, 0.1, False), (0.02, 0.1, True)]
+    if not quick:
+        grid += [(0.05, 0.2, False), (0.05, 0.2, True)]
+    bsteps = max(steps // 2, 1) if quick else steps
+    for cp, cf, pt in grid:
+        r = lm_experiment(rule="fasgd", lam=lam, steps=bsteps, lr=blr,
+                          c_push=cp, c_fetch=cf, per_tensor=pt)
+        bandwidth.append(r)
+        sent = r["bytes_sent"] / max(r["bytes_total"], 1)
+        print(f"  lm bandwidth c_push={cp} c_fetch={cf} "
+              f"per_tensor={pt} sent={sent:6.1%} "
+              f"final={r['final_cost']:.4f} ({r['wall_s']}s)")
+
+    # engine parity: K-event fused cotangent vs serial, same config (asgd is
+    # exactly v-independent, so 'auto' takes the cotangent contraction).
+    esteps = max(steps // 4, 1)
+    engine = []
+    for mode, kw in [("serial", {}),
+                     ("cotangent", dict(events_per_step=4, apply_mode="fused",
+                                        fused_mode="cotangent"))]:
+        r = lm_experiment(rule="asgd", lam=lam, steps=esteps,
+                          lr=pools["asgd"][-1], **kw)
+        engine.append(r)
+        print(f"  lm engine {mode:9s} final={r['final_cost']:.4f} "
+              f"events/s={r['events_per_sec_e2e']} ({r['wall_s']}s)")
+    return staleness, bandwidth, engine
+
+
+def best_at(rows, rule, lam):
+    """Best-final row for (rule, λ) — the paper's per-rule lr selection."""
+    cands = [r for r in rows if r["rule"] == rule and r["lam"] == lam]
+    return min(cands, key=lambda r: r["final_cost"])
+
+
+def summarize(staleness, engine):
+    lam = max(r["lam"] for r in staleness)
+    a, f = best_at(staleness, "asgd", lam), best_at(staleness, "fasgd", lam)
+    return {
+        "lam": lam,
+        "asgd_final": a["final_cost"], "asgd_lr": a["lr"],
+        "fasgd_final": f["final_cost"], "fasgd_lr": f["lr"],
+        "fasgd_beats_asgd": bool(f["final_cost"] < a["final_cost"]),
+        "cotangent_final": engine[-1]["final_cost"],
+        "serial_final": engine[0]["final_cost"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: short runs, single lr, lam=16 only")
+    args = ap.parse_args()
+    steps = args.steps or (120 if args.quick else 800)
+    staleness, bandwidth, engine = run(steps, quick=args.quick)
+    summary = summarize(staleness, engine)
+    payload = {"quick": args.quick, "arch": ARCH, "steps": steps,
+               "seq_len": SEQ_LEN, "temperature": TEMPERATURE,
+               "summary": summary, "staleness": staleness,
+               "bandwidth": bandwidth, "engine": engine}
+    save_bench("BENCH_lm_training.json", payload,
+               results_name="lm_training.json")
+    print("lm_training summary:", summary)
+    if not args.quick:
+        # acceptance gate: the staleness-aware scale must pay off on the
+        # transformer task, not just the paper's MLP.
+        assert summary["fasgd_beats_asgd"], (
+            f"fasgd final {summary['fasgd_final']:.4f} did not beat "
+            f"asgd final {summary['asgd_final']:.4f} at lam={summary['lam']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

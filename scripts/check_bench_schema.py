@@ -39,6 +39,30 @@ _KERNEL_ENTRY = {
     "allclose_vs_ref": "bool",
 }
 
+# one FRED run of the smoke transformer on the token task
+# (benchmarks/lm_training.py::lm_experiment) — shared by all three sweeps
+_LM_ROW = {
+    "rule": "str",
+    "lam": "int",
+    "lr": "number",
+    "steps": "int",
+    "c_push": "number",
+    "c_fetch": "number",
+    "per_tensor": "bool",
+    "events_per_step": "int",
+    "apply_mode": "str",            # 'serial' | 'fused'
+    "fused_mode": "str",            # 'auto' | 'materialized' | 'cotangent'
+    "curve_steps": ("list", "int"),
+    "val_cost": ("list", "number"),
+    "final_cost": "number",
+    "best_cost": "number",
+    "auc": "number",
+    "bytes_sent": "number",
+    "bytes_total": "number",
+    "wall_s": "number",
+    "events_per_sec_e2e": "number",
+}
+
 SCHEMAS = {
     "BENCH_sim_throughput.json": {
         "model_sizes": ("list", "int"),
@@ -207,6 +231,29 @@ SCHEMAS = {
             "peak_bytes_shrink": "number",
             "ideal_shrink": "int",
         },
+    },
+    "BENCH_lm_training.json": {
+        "quick": "bool",
+        "arch": "str",
+        "steps": "int",
+        "seq_len": "int",
+        "temperature": "number",
+        "summary": {
+            "lam": "int",
+            # per-rule best-lr finals at the high-staleness point
+            # (acceptance, full run: fasgd_beats_asgd is true)
+            "asgd_final": "number",
+            "asgd_lr": "number",
+            "fasgd_final": "number",
+            "fasgd_lr": "number",
+            "fasgd_beats_asgd": "bool",
+            # engine parity arms (serial vs K-event fused cotangent)
+            "cotangent_final": "number",
+            "serial_final": "number",
+        },
+        "staleness": ("list", _LM_ROW),
+        "bandwidth": ("list", _LM_ROW),
+        "engine": ("list", _LM_ROW),
     },
     "BENCH_fig3_bandwidth.json": {
         "quick": "bool",

@@ -30,6 +30,7 @@ from repro.data.tokens import TokenDataConfig, make_batch as make_token_batch
 from repro.launch.mesh import make_host_mesh, make_server_mesh
 from repro.launch.steps import make_train_step, server_config
 from repro.models.api import make_batch, param_count
+from repro.models.lm import make_lm_loss
 from repro.models.transformer import init_model, loss_fn
 from repro.sharding import set_mesh_context
 
@@ -59,6 +60,17 @@ def main():
     ap.add_argument("--clients", type=int, default=4,
                     help="round-trainer client groups; 0 = pod-sync step")
     ap.add_argument("--apply-mode", default="serial", choices=["serial", "fused"])
+    ap.add_argument("--fused-mode", default="auto",
+                    choices=["auto", "materialized", "cotangent"],
+                    help="fused-apply gradient reduction: 'auto' rides the "
+                         "engine's cotangent path for v-independent rules "
+                         "when eligible, 'materialized' forces the [C, P] "
+                         "per-event reduction, 'cotangent' demands the "
+                         "contraction (error if ineligible)")
+    ap.add_argument("--drop-policy", default="local_apply",
+                    choices=["local_apply", "discard"],
+                    help="what a gated-out push does with its gradient "
+                         "(cotangent reduction needs 'discard')")
     ap.add_argument("--c-push", type=float, default=0.0)
     ap.add_argument("--c-fetch", type=float, default=0.0)
     ap.add_argument("--per-tensor", action="store_true",
@@ -125,6 +137,7 @@ def main():
         num_round_clients=max(args.clients, 1), rule=args.rule, lr=args.lr,
         c_push=args.c_push, c_fetch=args.c_fetch, variant=args.variant,
         per_tensor_push=args.per_tensor, per_tensor_fetch=args.per_tensor,
+        fused_mode=args.fused_mode, drop_policy=args.drop_policy,
         queue_capacity=args.queue_capacity, drain_policy=args.drain_policy,
         drain_k=args.drain_k, admission_policy=args.admission_policy,
         scenario=scn, kasync_k=kasync_k,
@@ -146,6 +159,17 @@ def main():
         (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, cfg, batch)
         return loss, g
 
+    # token archs get the shared/delta event-batched loss so the fused
+    # cotangent reduction applies to the transformer stack (models/lm.py);
+    # audio/vlm batches carry extra modal keys the adapter doesn't thread.
+    batched_loss_fn = None
+    if cfg.arch_type not in ("audio", "vlm"):
+        lm_loss = make_lm_loss(cfg)
+
+        def batched_loss_fn(W, deltas, batch):
+            return lm_loss.event_batched(
+                W, deltas, batch["tokens"], batch["targets"])
+
     if args.clients > 0:
         state = init_round_state(tc, params)
         if tc.server_shards > 1:
@@ -155,7 +179,9 @@ def main():
             state = shard_round_state(state, smesh, tc.server_axis)
             print(f"[train] server sharded: {tc.server_shards} shards on "
                   f"axis '{tc.server_axis}' (mesh {dict(smesh.shape)})")
-        step_fn = jax.jit(build_round_step(tc, grad_fn, apply_mode=args.apply_mode))
+        step_fn = jax.jit(build_round_step(
+            tc, grad_fn, apply_mode=args.apply_mode,
+            batched_loss_fn=batched_loss_fn))
         C = args.clients
         assert args.batch % C == 0, "global batch must divide clients"
         Bc = args.batch // C

@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, rms_norm, rope
+from repro.models.layers import delta_einsum, dense_init, dget, rms_norm, rope
 from repro.sharding.rules import attn_shard_mode, constrain
 
 NEG_INF = -1e30
@@ -112,11 +112,16 @@ def _sdpa(q, k, v, *, causal, window, q_offset, chunk=512, unroll=False):
 # GQA paths
 # ---------------------------------------------------------------------------
 
-def gqa_forward(p, cfg, x, positions):
-    """Full-sequence attention (train / encoder). x: [B,S,d]."""
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+def gqa_forward(p, cfg, x, positions, dp=None):
+    """Full-sequence attention (train / encoder). x: [B,S,d].
+
+    `dp` optionally carries a stale parameter offset; the four projections
+    then run in the shared/delta split form (`delta_einsum`) so the
+    cotangent fused path contracts weight gradients over events.
+    """
+    q = delta_einsum("bsd,dhk->bshk", x, p["wq"], dget(dp, "wq"))
+    k = delta_einsum("bsd,dhk->bshk", x, p["wk"], dget(dp, "wk"))
+    v = delta_einsum("bsd,dhk->bshk", x, p["wv"], dget(dp, "wv"))
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     if attn_shard_mode() == "heads":
@@ -124,7 +129,7 @@ def gqa_forward(p, cfg, x, positions):
         q, k, v = (constrain(t, "attn") for t in (q, k, v))
     o = _sdpa(q, k, v, causal=cfg.causal, window=cfg.attn_window, q_offset=0,
               unroll=cfg.unroll_stack)
-    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return delta_einsum("bshk,hkd->bsd", o, p["wo"], dget(dp, "wo"))
 
 
 def gqa_prefill(p, cfg, x, positions):
@@ -184,7 +189,13 @@ def gqa_decode(p, cfg, x, cache, pos):
 # MLA paths (deepseek-v2)
 # ---------------------------------------------------------------------------
 
-def mla_forward(p, cfg, x, positions):
+def mla_forward(p, cfg, x, positions, dp=None):
+    """MLA full-sequence forward; `dp` (stale offset) is folded into
+    effective parameters — the latent down/up projections feed the
+    normalized latent `c` into *both* K and V, so a shared/delta GEMM split
+    would not commute through the intermediate rms_norm anyway."""
+    if dp is not None:
+        p = jax.tree.map(lambda w, d: w + d, p, dp)
     out, _ = mla_prefill(p, cfg, x, positions)
     return out
 

@@ -14,6 +14,36 @@ def _norm_init(shape, dtype):
     return jnp.ones(shape, dtype)
 
 
+def dget(dp, key):
+    """Sub-delta lookup: `dp[key]`, passing an absent delta tree through."""
+    return None if dp is None else dp[key]
+
+
+def eff(w, dw):
+    """Effective parameter `w + dw` (plain `w` when there is no delta).
+
+    For small / elementwise-consumed leaves (norm gains, biases, conv taps)
+    the add node is cheap and the per-event gradient it materializes under
+    vmap is negligible — the shared/delta GEMM split below is reserved for
+    the large contractions where a [K, P] gradient batch would hurt.
+    """
+    return w if dw is None else w + dw
+
+
+def delta_einsum(eq, x, w, dw=None):
+    """`einsum(eq, x, w)` with an optional stale offset `dw = sg(p_k − w)`.
+
+    Split as `einsum(x, w) + einsum(x, dw)` so the *shared* `w` stays the
+    differentiable operand of its GEMM: under `jax.vmap` with `w` held at
+    `in_axes=None` the weight-cotangent transpose contracts over the
+    combined event×token batch in one pass and never materializes a
+    per-event [K, ...] weight gradient (docs/ARCHITECTURE.md §"Cotangent
+    fused path" — the same trick as `mlp.nll_loss_event_batched`).
+    """
+    y = jnp.einsum(eq, x, w)
+    return y if dw is None else y + jnp.einsum(eq, x, dw)
+
+
 def dense_init(key, shape, dtype, scale=None):
     fan_in = shape[0] if len(shape) >= 2 else 1
     if scale is None:
@@ -50,10 +80,18 @@ def init_mlp(key, d_model: int, d_ff: int, dtype):
     }
 
 
-def mlp_forward(p, x):
-    """SwiGLU MLP (llama family standard)."""
-    gate = jax.nn.silu(x @ p["w_gate"])
-    return (gate * (x @ p["w_up"])) @ p["w_down"]
+def mlp_forward(p, x, dp=None):
+    """SwiGLU MLP (llama family standard).
+
+    `dp` optionally carries a stale parameter offset (same pytree structure
+    as `p`); every GEMM is then computed in the shared/delta split form
+    (`delta_einsum`) for the cotangent fused path.
+    """
+    gate = jax.nn.silu(delta_einsum("...d,df->...f", x, p["w_gate"],
+                                    dget(dp, "w_gate")))
+    up = delta_einsum("...d,df->...f", x, p["w_up"], dget(dp, "w_up"))
+    return delta_einsum("...f,fd->...d", gate * up, p["w_down"],
+                        dget(dp, "w_down"))
 
 
 def init_embedding(key, vocab: int, d_model: int, dtype):

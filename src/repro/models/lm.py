@@ -1,0 +1,70 @@
+"""LM loss adapters: the transformer zoo in the staleness engine's shape.
+
+The simulation engine (FRED, `repro.sim.fred`) and the round trainer
+(`repro.core.round_trainer`) speak one loss convention:
+
+    loss(params, x, y) -> scalar                       (serial / fused path)
+    loss.event_batched(W, deltas, x, y) -> [K]         (cotangent fused path)
+
+where `deltas` carries each event's stop-gradient stale offset
+δ_k = sg(p_k − W) with [K, ...]-stacked leaves.  `make_lm_loss` wraps
+`transformer.loss_fn` — which covers every arch family (dense, MoE, SSM,
+hybrid, audio, vlm) — into that convention for token-based archs: `x` is a
+token batch [μ, S] (or [K, μ, S] event-batched) and `y` the shifted targets.
+
+The event-batched variant is `jax.vmap` over (δ_k, tokens_k, targets_k)
+with W closed over (`in_axes=None` by capture): inside, every large GEMM is
+evaluated in the shared/delta split `einsum(h, W) + einsum(h, δ_k)`
+(`layers.delta_einsum`), so the weight-cotangent transpose contracts over
+the combined K·μ·S axis in one pass and never materializes a per-event
+[K, P] gradient batch — this is what makes the engine's
+`fused_apply_cotangent` pay off on attention/dense layers instead of
+falling back to the generic `engine.event_batched_losses` path.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def make_lm_loss(cfg: ModelConfig, aux_weight: float = 0.01):
+    """Scalar LM loss `(params, tokens, targets) -> loss` with an attached
+    `.event_batched` shared/delta variant (picked up by
+    `engine.resolve_event_batched_loss`)."""
+
+    def loss(params, tokens, targets):
+        value, _ = transformer.loss_fn(
+            params, cfg, {"tokens": tokens, "targets": targets},
+            aux_weight=aux_weight)
+        return value
+
+    def event_batched(params, deltas, tokens, targets):
+        """Per-event losses [K] at the stale points W + δ_k.
+
+        `params` is the single differentiable W; vmap batches the deltas
+        and the per-event minibatches while W rides along unbatched, so
+        the shared operand of every `delta_einsum` inside the forward
+        stays rank-constant across events.
+        """
+        def one_event(delta, tok, tgt):
+            value, _ = transformer.loss_fn(
+                params, cfg, {"tokens": tok, "targets": tgt},
+                aux_weight=aux_weight, deltas=delta)
+            return value
+
+        return jax.vmap(one_event)(deltas, tokens, targets)
+
+    loss.event_batched = event_batched
+    return loss
+
+
+def make_eval_fn(cfg: ModelConfig, tokens, targets):
+    """Held-out eval closure `params -> loss` for `run_simulation`'s
+    `eval_fn` hook (token CE on a fixed batch, no MoE aux term)."""
+    def eval_fn(params):
+        value, metrics = transformer.loss_fn(
+            params, cfg, {"tokens": tokens, "targets": targets})
+        return metrics["ce"]
+    return jax.jit(eval_fn)

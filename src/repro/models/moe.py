@@ -34,8 +34,17 @@ def init_moe(key, cfg):
     return p
 
 
-def moe_forward(p, cfg, x, capacity_factor: float = 1.25):
-    """x: [B, S, d] → (y: [B, S, d], aux_loss: scalar)."""
+def moe_forward(p, cfg, x, capacity_factor: float = 1.25, dp=None):
+    """x: [B, S, d] → (y: [B, S, d], aux_loss: scalar).
+
+    `dp` (stale parameter offset for the event-batched loss) is folded into
+    effective parameters: the router's top-k and the capacity dispatch are
+    data-dependent on the *stale* logits, so a shared/delta GEMM split would
+    route tokens differently from the serial path — correctness first here;
+    the cotangent contraction still pays off on the attention/dense layers.
+    """
+    if dp is not None:
+        p = jax.tree.map(lambda w, dl: w + dl, p, dp)
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.num_experts_per_tok
     T = B * S

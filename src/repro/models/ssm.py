@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, rms_norm
+from repro.models.layers import delta_einsum, dense_init, dget, eff, rms_norm
 from repro.sharding.rules import constrain, constrain_axes
 
 
@@ -155,34 +155,45 @@ def ssd_naive(x, dt, A, B, C, h0=None):
     return jnp.moveaxis(ys, 0, 1), h
 
 
-def ssm_forward(p, cfg, x, h0=None, conv0=None, return_state: bool = False):
+def ssm_forward(p, cfg, x, h0=None, conv0=None, return_state: bool = False,
+                dp=None):
     """Full-sequence Mamba2 block. x: [B, L, d] → [B, L, d].
 
     If return_state, also returns {"h": [B,H,P,N], "conv": [B,W-1,conv_dim]}.
+    `dp` optionally carries a stale parameter offset: the two large
+    projections take the shared/delta GEMM split, the small recurrence
+    leaves (conv taps, A_log, D, dt_bias, out_norm) fold into effective
+    parameters.
     """
     B_, L, d = x.shape
     H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
-    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"])
+    zxbcdt = delta_einsum("bld,dk->blk", x, p["in_proj"], dget(dp, "in_proj"))
     z, xbc, dtr = _split(cfg, zxbcdt)
+    conv_w = eff(p["conv_w"], dget(dp, "conv_w"))
+    conv_b = eff(p["conv_b"], dget(dp, "conv_b"))
     if conv0 is not None:
         xbc_in = jnp.concatenate([conv0, xbc], axis=1)
-        conv_out = _causal_conv(xbc_in, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+        conv_out = _causal_conv(xbc_in, conv_w, conv_b)[:, conv0.shape[1]:]
     else:
-        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        conv_out = _causal_conv(xbc, conv_w, conv_b)
     conv_out = constrain(conv_out, "bsd")
     xs = conv_out[..., :cfg.d_inner].reshape(B_, L, H, P)
     Bmat = conv_out[..., cfg.d_inner:cfg.d_inner + N]
     Cmat = conv_out[..., cfg.d_inner + N:]
-    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
-    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(
+        dtr.astype(jnp.float32)
+        + eff(p["dt_bias"], dget(dp, "dt_bias")).astype(jnp.float32))
+    A = -jnp.exp(eff(p["A_log"], dget(dp, "A_log")).astype(jnp.float32))
 
     y, h_fin = ssd_chunked(xs.astype(jnp.float32), dt, A,
                            Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
                            cfg.ssm_chunk, h0=h0, unroll=cfg.unroll_stack)
-    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y + eff(p["D"], dget(dp, "D")).astype(jnp.float32)[
+        None, None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(B_, L, cfg.d_inner).astype(x.dtype)
-    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
-    out = jnp.einsum("blk,kd->bld", y, p["out_proj"])
+    y = rms_norm(y * jax.nn.silu(z), eff(p["out_norm"], dget(dp, "out_norm")),
+                 cfg.norm_eps)
+    out = delta_einsum("blk,kd->bld", y, p["out_proj"], dget(dp, "out_proj"))
     if return_state:
         W = cfg.conv_width
         conv_tail = (jnp.concatenate([conv0, xbc], axis=1) if conv0 is not None else

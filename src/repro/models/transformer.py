@@ -32,7 +32,9 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import dense_init, init_embedding, init_mlp, mlp_forward, rms_norm
+from repro.models.layers import (
+    delta_einsum, dense_init, dget, eff, init_embedding, init_mlp,
+    mlp_forward, rms_norm)
 from repro.sharding.rules import constrain
 
 
@@ -97,29 +99,37 @@ def init_model(key, cfg: ModelConfig):
 # block forwards (full sequence)
 # ---------------------------------------------------------------------------
 
-def _attn_block(lp, cfg, x, positions):
-    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+def _attn_block(lp, cfg, x, positions, dl=None):
+    h = rms_norm(x, eff(lp["ln1"], dget(dl, "ln1")), cfg.norm_eps)
     if cfg.use_mla:
-        h = attn.mla_forward(lp["attn"], cfg, h, positions)
+        h = attn.mla_forward(lp["attn"], cfg, h, positions, dp=dget(dl, "attn"))
     else:
-        h = attn.gqa_forward(lp["attn"], cfg, h, positions)
+        h = attn.gqa_forward(lp["attn"], cfg, h, positions, dp=dget(dl, "attn"))
     x = x + h
-    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    h = rms_norm(x, eff(lp["ln2"], dget(dl, "ln2")), cfg.norm_eps)
     if cfg.is_moe:
-        h, aux = moe_mod.moe_forward(lp["moe"], cfg, h)
+        h, aux = moe_mod.moe_forward(lp["moe"], cfg, h, dp=dget(dl, "moe"))
     else:
-        h, aux = mlp_forward(lp["mlp"], h), jnp.zeros((), jnp.float32)
+        h, aux = mlp_forward(lp["mlp"], h, dp=dget(dl, "mlp")), \
+            jnp.zeros((), jnp.float32)
     return x + h, aux
 
 
-def _mamba_block(lp, cfg, x):
-    return x + ssm_mod.ssm_forward(lp["mamba"], cfg, rms_norm(x, lp["ln"], cfg.norm_eps))
+def _mamba_block(lp, cfg, x, dl=None):
+    h = rms_norm(x, eff(lp["ln"], dget(dl, "ln")), cfg.norm_eps)
+    return x + ssm_mod.ssm_forward(lp["mamba"], cfg, h, dp=dget(dl, "mamba"))
 
 
-def _shared_block(sp, cfg, x, emb0, positions):
-    y = jnp.einsum("bsd,dk->bsk", jnp.concatenate([x, emb0], axis=-1), sp["in_proj"])
-    y = y + attn.gqa_forward(sp["attn"], cfg, rms_norm(y, sp["ln1"], cfg.norm_eps), positions)
-    y = y + mlp_forward(sp["mlp"], rms_norm(y, sp["ln2"], cfg.norm_eps))
+def _shared_block(sp, cfg, x, emb0, positions, ds=None):
+    y = delta_einsum("bsd,dk->bsk", jnp.concatenate([x, emb0], axis=-1),
+                     sp["in_proj"], dget(ds, "in_proj"))
+    y = y + attn.gqa_forward(
+        sp["attn"], cfg,
+        rms_norm(y, eff(sp["ln1"], dget(ds, "ln1")), cfg.norm_eps),
+        positions, dp=dget(ds, "attn"))
+    y = y + mlp_forward(
+        sp["mlp"], rms_norm(y, eff(sp["ln2"], dget(ds, "ln2")), cfg.norm_eps),
+        dp=dget(ds, "mlp"))
     return x + y
 
 
@@ -138,30 +148,49 @@ def _scan(cfg, body, init, xs):
     return jax.lax.scan(body, init, xs, unroll=True if cfg.unroll_stack else 1)
 
 
-def _run_stack(params, cfg, x, positions):
-    """Full-sequence stack → (x, total_moe_aux)."""
+def _run_stack(params, cfg, x, positions, deltas=None):
+    """Full-sequence stack → (x, total_moe_aux).
+
+    With `deltas` (a stale parameter offset, same structure as `params`)
+    the layer scan consumes (layer, delta-layer) pairs jointly — both carry
+    [L, ...]-stacked leaves — so HLO size stays O(1) in depth on the
+    event-batched path too.
+    """
     x = constrain(x, "bsd")
+    dls = None if deltas is None else deltas["layers"]
     if cfg.arch_type in ("ssm",):
-        def body(carry, lp):
-            return constrain(_mamba_block(lp, cfg, carry), "bsd"), None
-        x, _ = _scan(cfg, _maybe_remat(body, cfg), x, params["layers"])
+        def body(carry, inp):
+            lp, dl = (inp, None) if deltas is None else inp
+            return constrain(_mamba_block(lp, cfg, carry, dl), "bsd"), None
+        xs = params["layers"] if deltas is None else (params["layers"], dls)
+        x, _ = _scan(cfg, _maybe_remat(body, cfg), x, xs)
         return x, jnp.zeros((), jnp.float32)
 
     if cfg.arch_type == "hybrid":
         k, n_groups, rest = _hybrid_split(cfg)
         emb0 = x
-        grouped = jax.tree.map(lambda l: l[: n_groups * k].reshape((n_groups, k) + l.shape[1:]),
-                               params["layers"])
-        tail = jax.tree.map(lambda l: l[n_groups * k:], params["layers"])
-        sp = params["shared"]
 
-        def inner(carry, lp):
-            return constrain(_mamba_block(lp, cfg, carry), "bsd"), None
+        def regroup(layers):
+            grouped = jax.tree.map(
+                lambda l: l[: n_groups * k].reshape((n_groups, k) + l.shape[1:]),
+                layers)
+            return grouped, jax.tree.map(lambda l: l[n_groups * k:], layers)
+
+        grouped, tail = regroup(params["layers"])
+        if deltas is not None:
+            dgrouped, dtail = regroup(dls)
+            grouped, tail = (grouped, dgrouped), (tail, dtail)
+        sp = params["shared"]
+        ds = dget(deltas, "shared")
+
+        def inner(carry, inp):
+            lp, dl = (inp, None) if deltas is None else inp
+            return constrain(_mamba_block(lp, cfg, carry, dl), "bsd"), None
         inner = _maybe_remat(inner, cfg)
 
         def outer(carry, glp):
             h, _ = _scan(cfg, inner, carry, glp)
-            h = _shared_block(sp, cfg, h, emb0, positions)
+            h = _shared_block(sp, cfg, h, emb0, positions, ds)
             return constrain(h, "bsd"), None
 
         # remat the *outer* body too: without it the backward saves every
@@ -172,13 +201,15 @@ def _run_stack(params, cfg, x, positions):
             x, _ = _scan(cfg, inner, x, tail)
         return x, jnp.zeros((), jnp.float32)
 
-    def body(carry, lp):
+    def body(carry, inp):
+        lp, dl = (inp, None) if deltas is None else inp
         x, aux = carry
-        x, a = _attn_block(lp, cfg, x, positions)
+        x, a = _attn_block(lp, cfg, x, positions, dl)
         return (constrain(x, "bsd"), aux + a), None
 
+    xs = params["layers"] if deltas is None else (params["layers"], dls)
     (x, aux), _ = _scan(
-        cfg, _maybe_remat(body, cfg), (x, jnp.zeros((), jnp.float32)), params["layers"])
+        cfg, _maybe_remat(body, cfg), (x, jnp.zeros((), jnp.float32)), xs)
     return x, aux
 
 
@@ -186,16 +217,30 @@ def _run_stack(params, cfg, x, positions):
 # embedding / heads
 # ---------------------------------------------------------------------------
 
-def _embed_inputs(params, cfg, batch):
-    """→ (x [B,S,d], positions [B,S], loss_mask [B,S] or None)."""
+def _embed_inputs(params, cfg, batch, deltas=None):
+    """→ (x [B,S,d], positions [B,S], loss_mask [B,S] or None).
+
+    The embedding gather under `deltas` stays in split form
+    (`W[tokens] + δ[tokens]`) rather than gathering from `W + δ`: the
+    transpose of a gather on the shared `W` is one scatter-add over the
+    combined event×token batch, never a per-event [K, V, d] gradient.
+    """
+    def embed_tok(tokens):
+        tok = params["embed"][tokens]
+        if deltas is not None:
+            tok = tok + deltas["embed"][tokens]
+        return tok
+
     if cfg.arch_type == "audio":
-        x = jnp.einsum("bsf,fd->bsd", batch["frames"], params["frame_proj"])
+        x = delta_einsum("bsf,fd->bsd", batch["frames"], params["frame_proj"],
+                         dget(deltas, "frame_proj"))
         B, S = x.shape[:2]
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         return x, pos, None
     if cfg.arch_type == "vlm":
-        img = jnp.einsum("bpf,fd->bpd", batch["image_embeds"], params["img_proj"])
-        tok = params["embed"][batch["tokens"]]
+        img = delta_einsum("bpf,fd->bpd", batch["image_embeds"],
+                           params["img_proj"], dget(deltas, "img_proj"))
+        tok = embed_tok(batch["tokens"])
         x = jnp.concatenate([img, tok], axis=1)
         B, S = x.shape[:2]
         P = img.shape[1]
@@ -205,7 +250,7 @@ def _embed_inputs(params, cfg, batch):
             axis=1,
         )
         return x, pos, mask
-    tok = params["embed"][batch["tokens"]]
+    tok = embed_tok(batch["tokens"])
     B, S = tok.shape[:2]
     pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     return tok, pos, None
@@ -219,18 +264,22 @@ def mask_vocab_pad(cfg: ModelConfig, logits):
     return jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
 
 
-def forward(params, cfg: ModelConfig, batch):
+def forward(params, cfg: ModelConfig, batch, deltas=None):
     """Full-sequence forward → (logits [B,S,V], moe_aux)."""
-    x, positions, _ = _embed_inputs(params, cfg, batch)
-    x, aux = _run_stack(params, cfg, x, positions)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = constrain(jnp.einsum("bsd,dv->bsv", x, params["unembed"]), "bsv")
+    x, positions, _ = _embed_inputs(params, cfg, batch, deltas)
+    x, aux = _run_stack(params, cfg, x, positions, deltas)
+    x = rms_norm(x, eff(params["final_norm"], dget(deltas, "final_norm")),
+                 cfg.norm_eps)
+    logits = constrain(
+        delta_einsum("bsd,dv->bsv", x, params["unembed"],
+                     dget(deltas, "unembed")), "bsv")
     return mask_vocab_pad(cfg, logits), aux
 
 
-def _ce_dense(params, cfg, x, targets, mask):
+def _ce_dense(params, cfg, x, targets, mask, deltas=None):
     logits = mask_vocab_pad(cfg, constrain(
-        jnp.einsum("bsd,dv->bsv", x, params["unembed"]), "bsv"
+        delta_einsum("bsd,dv->bsv", x, params["unembed"],
+                     dget(deltas, "unembed")), "bsv"
     ).astype(jnp.float32))
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
@@ -239,7 +288,7 @@ def _ce_dense(params, cfg, x, targets, mask):
     return jnp.mean(nll)
 
 
-def _ce_chunked(params, cfg, x, targets, mask):
+def _ce_chunked(params, cfg, x, targets, mask, deltas=None):
     """§Perf: CE via a seq-chunked scan — the f32 logits buffer is
     [B, chunk, V] instead of [B, S, V]; backward recomputes per chunk."""
     B, S, d = x.shape
@@ -253,7 +302,8 @@ def _ce_chunked(params, cfg, x, targets, mask):
     def body(acc, inp):
         xch, tch, wch = inp
         logits = mask_vocab_pad(cfg, constrain(
-            jnp.einsum("bcd,dv->bcv", xch, params["unembed"]), "bsv"
+            delta_einsum("bcd,dv->bcv", xch, params["unembed"],
+                         dget(deltas, "unembed")), "bsv"
         ).astype(jnp.float32))
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, tch[..., None], axis=-1)[..., 0]
@@ -265,11 +315,21 @@ def _ce_chunked(params, cfg, x, targets, mask):
     return tot / jnp.maximum(cnt, 1.0)
 
 
-def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
-    """Cross-entropy (+ MoE aux) → (loss, metrics)."""
-    x, positions, mask = _embed_inputs(params, cfg, batch)
-    x, aux = _run_stack(params, cfg, x, positions)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01,
+            deltas=None):
+    """Cross-entropy (+ MoE aux) → (loss, metrics).
+
+    `deltas`, when given, is a per-event stale parameter offset
+    `sg(p_k − W)` with the same structure as `params`; the forward is then
+    evaluated at the *stale* point `W + δ` while keeping `params` the
+    differentiable operand of every large GEMM (shared/delta split — see
+    `layers.delta_einsum`).  This is what `repro.models.lm` vmaps over for
+    the engine's cotangent fused path.
+    """
+    x, positions, mask = _embed_inputs(params, cfg, batch, deltas)
+    x, aux = _run_stack(params, cfg, x, positions, deltas)
+    x = rms_norm(x, eff(params["final_norm"], dget(deltas, "final_norm")),
+                 cfg.norm_eps)
 
     targets = batch["targets"]
     if cfg.arch_type == "vlm":
@@ -278,8 +338,8 @@ def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
         x = x[:, P:, :]
         mask = None
     if cfg.loss_chunk and x.shape[1] % cfg.loss_chunk == 0:
-        ce = _ce_chunked(params, cfg, x, targets, mask)
+        ce = _ce_chunked(params, cfg, x, targets, mask, deltas)
     else:
-        ce = _ce_dense(params, cfg, x, targets, mask)
+        ce = _ce_dense(params, cfg, x, targets, mask, deltas)
     loss = ce + aux_weight * aux
     return loss, {"ce": ce, "moe_aux": aux}

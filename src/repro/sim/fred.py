@@ -725,13 +725,16 @@ def build_step_fn(
     # A mesh only drives the shard_map'd gradient batch when it actually
     # carries the client axis; a server-only mesh (server sharding,
     # core/server_shard.py) flows through jit's partitioner instead and
-    # composes with every path below, the ingress queue included.
-    client_mesh = (mesh if mesh is not None
-                   and client_axis in getattr(mesh, "axis_names", ())
+    # composes with every path below, the ingress queue included.  The
+    # unsupported-combination checks key on the axis *name* (a size-1
+    # client axis still states intent), the shard_map wrap on size > 1.
+    names_client_axis = (mesh is not None
+                         and client_axis in getattr(mesh, "axis_names", ()))
+    client_mesh = (mesh if names_client_axis
                    and int(mesh.shape[client_axis]) > 1 else None)
 
     if config.queue_capacity:
-        if client_mesh is not None:
+        if names_client_axis:
             raise ValueError(
                 "queue_capacity > 0 does not support a client-axis mesh: "
                 "the ring buffer is replicated server state and the "
@@ -914,12 +917,12 @@ def build_step_fn(
     use_cotangent = (config.fused_mode == "cotangent"
                      or (config.fused_mode == "auto"
                          and config.cotangent_eligible()))
-    if use_cotangent and client_mesh is not None:
+    if use_cotangent and names_client_axis:
         if config.fused_mode == "cotangent":
             raise ValueError(
                 "fused_mode='cotangent' does not support a client-axis mesh "
                 "(shard_map wraps the materialized per-event gradients)")
-        use_cotangent = False
+        use_cotangent = client_mesh is None
     batched_losses = (
         engine.resolve_event_batched_loss(loss_fn, batched_loss_fn)
         if use_cotangent else None)

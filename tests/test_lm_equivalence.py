@@ -1,0 +1,238 @@
+"""LM equivalence matrix: the staleness engine on a real transformer pytree.
+
+`test_per_tensor.py` proves the apply-mode equivalences on the paper's flat
+MLP list-of-dicts; this file re-proves them on the transformer zoo's nested
+pytree (stacked [L, ...] layer leaves, embed/unembed, norm gains) through
+`models/lm.py`'s event-batched loss:
+
+  serial  ≈  fused(materialized)  ≈  fused(cotangent)
+
+at K=1 and K>1 for every v-independent fused registry rule, fasgd's
+explicit ε-reparameterized cotangent path, per-tensor gating, the queued
+drain path, and the round trainer.  Serial evaluates each event at the
+stale copy `p_k` directly while the event-batched loss computes
+`einsum(x, W) + einsum(x, δ_k)`, so the comparisons are allclose (float
+reassociation), not bitwise — materialized vs cotangent share the split
+arithmetic and agree much tighter.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import rules
+from repro.core.bandwidth import BandwidthConfig
+from repro.core.rules import ServerConfig
+from repro.data.tokens import TokenDataConfig, make_batch
+from repro.models.lm import make_lm_loss
+from repro.models.transformer import init_model, loss_fn as tf_loss_fn
+from repro.sim.fred import SimConfig, run_simulation
+
+from conftest import tree_allclose, tree_equal
+
+V_INDEP_RULES = tuple(
+    r for r in rules.registered_rules()
+    if rules.get_rule(r).supports_fused
+    and rules.get_rule(r).coeffs_are_v_independent)
+
+STEPS = 16
+
+
+@pytest.fixture(scope="session")
+def lm_setup():
+    """A genuinely tiny transformer (2 layers, d=64, vocab 128) + token
+    pools — small enough that every (rule, K, mode) cell jits in seconds."""
+    cfg = get_smoke_config(
+        "tinyllama-1.1b", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    tcfg = TokenDataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                           batch_size=128, temperature=0.5)
+    tok, tgt = make_batch(tcfg, 0)
+    return cfg, params, tok, tgt, make_lm_loss(cfg)
+
+
+_runs = {}
+
+
+def _run(lm_setup, rule, *, K=1, mode="serial", fused_mode="auto",
+         steps=STEPS, **sim_kw):
+    """Memoized FRED run on the tiny LM — one jit per distinct cell."""
+    cfg, params, tok, tgt, loss = lm_setup
+    key = (rule, K, mode, fused_mode, steps,
+           tuple(sorted(sim_kw)) and repr(sorted(sim_kw.items())))
+    if key not in _runs:
+        scfg = SimConfig(
+            num_clients=4, batch_size=4, seed=3,
+            server=ServerConfig(rule=rule, lr=0.01, num_clients=4),
+            events_per_step=K, apply_mode=mode, fused_mode=fused_mode,
+            **sim_kw)
+        _runs[key] = run_simulation(
+            scfg, loss, params, tok, tgt, steps, eval_every=steps,
+            eval_fn=lambda p: loss(p, tok[:16], tgt[:16]))
+    return _runs[key]
+
+
+def test_event_batched_matches_per_event_loss(lm_setup):
+    """`loss.event_batched(W, δ, x, y)` ≡ the serial loss at each stale
+    copy `W + δ_k` — the contract everything downstream leans on."""
+    cfg, W, tok, tgt, loss = lm_setup
+    K, B = 3, 2
+    keys = jax.random.split(jax.random.PRNGKey(1), K)
+
+    def noisy(k):
+        leaves, treedef = jax.tree.flatten(W)
+        ks = jax.random.split(k, len(leaves))
+        return jax.tree.unflatten(treedef, [
+            leaf + 0.02 * jax.random.normal(kk, leaf.shape, leaf.dtype)
+            for leaf, kk in zip(leaves, ks)])
+
+    stale = [noisy(k) for k in keys]
+    deltas = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[jax.tree.map(lambda a, b: a - b, s, W) for s in stale])
+    x = tok[: K * B].reshape(K, B, -1)
+    y = tgt[: K * B].reshape(K, B, -1)
+    got = loss.event_batched(W, deltas, x, y)
+    want = jnp.stack([loss(s, x[i], y[i]) for i, s in enumerate(stale)])
+    assert got.shape == (K,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_event_batched_grads_flow_to_every_leaf(lm_setup):
+    """The cotangent contraction needs dL/dW on the *shared* params: every
+    leaf of the nested transformer tree gets a finite, same-shaped grad."""
+    cfg, W, tok, tgt, loss = lm_setup
+    deltas = jax.tree.map(lambda leaf: jnp.zeros((2,) + leaf.shape,
+                                                 leaf.dtype), W)
+    x = tok[:4].reshape(2, 2, -1)
+    y = tgt[:4].reshape(2, 2, -1)
+    g = jax.grad(lambda p: jnp.sum(loss.event_batched(p, deltas, x, y)))(W)
+    assert jax.tree.structure(g) == jax.tree.structure(W)
+    for gl, wl in zip(jax.tree.leaves(g), jax.tree.leaves(W)):
+        assert gl.shape == wl.shape
+        assert np.isfinite(np.asarray(gl)).all()
+
+
+@pytest.mark.parametrize("rule", V_INDEP_RULES)
+def test_serial_vs_fused_vs_cotangent_k1(lm_setup, rule):
+    """The tentpole equivalence at K=1: all three apply paths land on the
+    same trajectory for every v-independent rule."""
+    serial = _run(lm_setup, rule, K=1, mode="serial")
+    mat = _run(lm_setup, rule, K=1, mode="fused", fused_mode="materialized")
+    cot = _run(lm_setup, rule, K=1, mode="fused", fused_mode="cotangent")
+    ps = serial["state"].server.params
+    pm = mat["state"].server.params
+    pc = cot["state"].server.params
+    # serial evaluates at p_k, event-batched at W + δ_k: float reassociation
+    assert tree_allclose(ps, pm, rtol=1e-3, atol=5e-4), rule
+    # materialized and cotangent share the split arithmetic: much tighter
+    assert tree_allclose(pm, pc, rtol=1e-4, atol=1e-5), rule
+    assert serial["final_timestamp"] == mat["final_timestamp"] \
+        == cot["final_timestamp"]
+
+
+@pytest.mark.parametrize("rule", V_INDEP_RULES)
+def test_cotangent_matches_materialized_k4(lm_setup, rule):
+    """K>1: a fused window applies its K events jointly (serial applies
+    them one at a time, so it is not the comparison point — same contract
+    as test_engine.test_cotangent_matches_materialized_k8); the two fused
+    reductions must agree on the windowed trajectory."""
+    mat = _run(lm_setup, rule, K=4, mode="fused", fused_mode="materialized")
+    cot = _run(lm_setup, rule, K=4, mode="fused", fused_mode="cotangent")
+    assert tree_allclose(mat["state"].server.params,
+                         cot["state"].server.params,
+                         rtol=1e-4, atol=1e-5), rule
+    assert mat["final_timestamp"] == cot["final_timestamp"]
+    assert mat["counters"] == cot["counters"]
+
+
+def test_serial_is_k_invariant_on_lm(lm_setup):
+    """Serial event batching is a pure scan re-chunking: K=4 must replay
+    the K=1 trajectory bitwise, transformer pytree included."""
+    k1 = _run(lm_setup, "asgd", K=1, mode="serial")
+    k4 = _run(lm_setup, "asgd", K=4, mode="serial")
+    assert tree_equal(k1["state"].server.params, k4["state"].server.params)
+    assert k1["final_timestamp"] == k4["final_timestamp"]
+
+
+def test_fasgd_explicit_cotangent(lm_setup):
+    """fasgd rides the cotangent path only on explicit request (its eq. 7
+    scale is ε-reparameterized, ~1e-8 relative error)."""
+    mat = _run(lm_setup, "fasgd", K=2, mode="fused",
+               fused_mode="materialized")
+    cot = _run(lm_setup, "fasgd", K=2, mode="fused", fused_mode="cotangent")
+    assert tree_allclose(mat["state"].server.params,
+                         cot["state"].server.params, rtol=1e-4, atol=1e-5)
+    assert mat["final_timestamp"] == cot["final_timestamp"]
+
+
+def test_per_tensor_gating_fused_matches_serial(lm_setup):
+    """Per-tensor push+fetch gating on the nested tree: fused K=1 equals
+    serial leaf-for-leaf (per-event gate keys align the RNG streams), and
+    the transformer's leaves really do desynchronize."""
+    bw = BandwidthConfig(c_push=0.5, c_fetch=0.5, per_tensor_push=True,
+                         per_tensor_fetch=True, drop_policy="skip")
+    serial = _run(lm_setup, "fasgd", mode="serial", bandwidth=bw)
+    fused = _run(lm_setup, "fasgd", mode="fused", bandwidth=bw)
+    assert tree_allclose(serial["state"].server.params,
+                         fused["state"].server.params, rtol=1e-3, atol=5e-4)
+    assert serial["counters"] == fused["counters"]
+    assert tree_equal(serial["state"].client_leaf_ts,
+                      fused["state"].client_leaf_ts)
+    leaf_ts = np.asarray(serial["state"].client_leaf_ts)
+    assert (leaf_ts.max(axis=1) != leaf_ts.min(axis=1)).any()
+
+
+def test_queue_drain_cotangent_matches_materialized(lm_setup):
+    """The queued path batches each drain window through the event-batched
+    loss: cotangent and materialized reductions must agree on the drained
+    trajectory and every queue counter."""
+    kw = dict(queue_capacity=8, drain_policy="drain_all")
+    mat = _run(lm_setup, "asgd", K=2, mode="fused",
+               fused_mode="materialized", **kw)
+    cot = _run(lm_setup, "asgd", K=2, mode="fused",
+               fused_mode="cotangent", **kw)
+    assert tree_allclose(mat["state"].server.params,
+                         cot["state"].server.params, rtol=1e-4, atol=1e-5)
+    assert mat["counters"] == cot["counters"]
+    assert mat["counters"]["queue_drained"] > 0
+
+
+def test_round_trainer_cotangent_matches_materialized(lm_setup):
+    """Round trainer with the dict-batch `batched_loss_fn` (train.py's
+    wiring): the cotangent reduction matches materialized step-for-step."""
+    from repro.configs.base import TrainerConfig
+    from repro.core.round_trainer import build_round_step, init_round_state
+    cfg, params, tok, tgt, loss = lm_setup
+
+    def grad_fn(p, batch):
+        (value, _), g = jax.value_and_grad(tf_loss_fn, has_aux=True)(
+            p, cfg, batch)
+        return value, g
+
+    def batched_loss_fn(W, deltas, batch):
+        return loss.event_batched(W, deltas, batch["tokens"],
+                                  batch["targets"])
+
+    C, Bc = 4, 2
+    batch = {"tokens": tok[: C * Bc].reshape(C, Bc, -1),
+             "targets": tgt[: C * Bc].reshape(C, Bc, -1)}
+    finals = {}
+    for fm in ("materialized", "cotangent"):
+        tc = TrainerConfig(num_round_clients=C, rule="asgd", lr=0.01,
+                           drop_policy="discard", fused_mode=fm)
+        st = init_round_state(tc, params)
+        step = jax.jit(build_round_step(tc, grad_fn, apply_mode="fused",
+                                        batched_loss_fn=batched_loss_fn))
+        for i in range(3):
+            st, m = step(st, batch, jax.random.PRNGKey(i))
+            assert np.isfinite(float(m["loss"]))
+        finals[fm] = st
+    assert tree_allclose(finals["materialized"].server.params,
+                         finals["cotangent"].server.params,
+                         rtol=1e-4, atol=1e-5)
+    assert int(finals["materialized"].server.timestamp) \
+        == int(finals["cotangent"].server.timestamp)

@@ -1,0 +1,117 @@
+"""Hypothesis property tests for the event-batched transformer loss.
+
+The contract under test (`models/lm.py`): for ANY event count K, delta
+magnitude, dedup collision pattern, and parameter dtype,
+
+    loss.event_batched(W, δ, x, y)[k] == loss(W + δ_k, x_k, y_k)
+
+in both the *shared-batch* form (every event sees the same minibatch — the
+drain-window shape FRED's dedup produces) and the *delta-batch* form (a
+distinct minibatch per event).  The left side computes every GEMM in the
+shared/delta split `einsum(h, W) + einsum(h, δ)`, so this property is what
+licenses the cotangent fused path on transformer pytrees.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (CI extra)")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenDataConfig, make_batch
+from repro.models.lm import make_lm_loss
+from repro.models.transformer import init_model
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+SEQ, B = 8, 2
+
+_cache = {}
+
+
+def _setup(dtype):
+    """Tiny transformer + token pool per dtype (built once per session)."""
+    if dtype not in _cache:
+        cfg = get_smoke_config(
+            "tinyllama-1.1b", num_layers=1, d_model=32, num_heads=2,
+            num_kv_heads=1, d_ff=64, vocab_size=128, head_dim=16,
+            param_dtype=dtype)
+        W = init_model(jax.random.PRNGKey(0), cfg)
+        tcfg = TokenDataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                               batch_size=64, temperature=0.5)
+        tok, tgt = make_batch(tcfg, 0)
+        _cache[dtype] = (make_lm_loss(cfg), W, tok, tgt)
+    return _cache[dtype]
+
+
+def _deltas(W, groups, scale, seed):
+    """[K, ...] delta stacks with the dedup collision pattern `groups`:
+    events with the same group index carry bitwise-identical deltas (what
+    `dedup_events` guarantees for copies fetched at the same T)."""
+    n_groups = max(groups) + 1
+    leaves, treedef = jax.tree.flatten(W)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    idx = jnp.asarray(groups)
+    out = []
+    for leaf, k in zip(leaves, keys):
+        base = scale * jax.random.normal(
+            k, (n_groups,) + leaf.shape).astype(leaf.dtype)
+        out.append(base[idx])
+    return jax.tree.unflatten(treedef, out)
+
+
+@given(
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    groups=st.lists(st.integers(0, 3), min_size=1, max_size=5).map(
+        lambda g: [x % (max(g) + 1) for x in g]),
+    scale=st.sampled_from([0.0, 1e-3, 5e-2]),
+    shared_batch=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_event_batched_equals_vmapped_per_event(dtype, groups, scale,
+                                                shared_batch, seed):
+    loss, W, tok, tgt = _setup(dtype)
+    K = len(groups)
+    deltas = _deltas(W, groups, scale, seed)
+    if shared_batch:
+        x = jnp.broadcast_to(tok[:B], (K, B, SEQ))
+        y = jnp.broadcast_to(tgt[:B], (K, B, SEQ))
+    else:
+        x = tok[: K * B].reshape(K, B, SEQ)
+        y = tgt[: K * B].reshape(K, B, SEQ)
+
+    got = loss.event_batched(W, deltas, x, y)
+    eff = jax.tree.map(lambda w, d: (w + d).astype(w.dtype), W, deltas)
+    want = jax.vmap(loss)(eff, x, y)
+
+    assert got.shape == (K,)
+    tol = dict(rtol=1e-4, atol=1e-5) if dtype == "float32" \
+        else dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), **tol)
+    # dedup collisions: identical (δ, batch) cells must land on identical
+    # losses — bitwise, the same guarantee dedup_events relies on.
+    if shared_batch:
+        g = np.asarray(groups)
+        got_np = np.asarray(got)
+        for gid in np.unique(g):
+            members = got_np[g == gid]
+            assert (members == members[0]).all()
+
+
+@given(seed=st.integers(0, 2**16))
+def test_zero_delta_matches_plain_loss(seed):
+    """δ = 0 collapses the split form to the plain loss exactly (the
+    event-batched path adds `einsum(x, 0)` terms only)."""
+    loss, W, tok, tgt = _setup("float32")
+    deltas = jax.tree.map(lambda w: jnp.zeros((2,) + w.shape, w.dtype), W)
+    rng = np.random.default_rng(seed)
+    i = int(rng.integers(0, 32))
+    x = jnp.stack([tok[i:i + B]] * 2)
+    y = jnp.stack([tgt[i:i + B]] * 2)
+    got = loss.event_batched(W, deltas, x, y)
+    want = loss(W, x[0], y[0])
+    np.testing.assert_allclose(np.asarray(got), float(want), rtol=1e-6)

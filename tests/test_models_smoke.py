@@ -71,13 +71,27 @@ def test_forward_shapes_and_finite(built, name):
 
 @pytest.mark.parametrize("name", ARCH_NAMES)
 def test_train_step_no_nans(built, name):
+    """One grad step: finite loss AND a gradient pytree that mirrors the
+    `init_model` output exactly — same treedef, and per-leaf shape/dtype —
+    so every optimizer/server rule can tree-map over (params, grads)
+    without silent broadcasting.  Every leaf must also be finite (NaNs in
+    a single layer would vanish inside a global norm check)."""
     cfg, params, batch = built(name)
     (loss, metrics), grads = jax.value_and_grad(
         lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
     assert bool(jnp.isfinite(loss))
+    assert jax.tree.structure(grads) == jax.tree.structure(params), name
+    gleaves = jax.tree_util.tree_leaves_with_path(grads)
+    pleaves = jax.tree_util.tree_leaves_with_path(params)
+    for (gpath, g), (ppath, p) in zip(gleaves, pleaves):
+        assert gpath == ppath
+        label = (name, jax.tree_util.keystr(gpath))
+        assert g.shape == p.shape, label
+        assert g.dtype == p.dtype, label
+        assert bool(jnp.isfinite(g.astype(jnp.float32)).all()), label
     gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
                          for g in jax.tree.leaves(grads)))
-    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0
+    assert float(gnorm) > 0.0
 
 
 @pytest.mark.parametrize("name", ARCH_NAMES)
